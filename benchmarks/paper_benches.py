@@ -1,0 +1,156 @@
+"""One benchmark per paper table/figure. Each returns (name, us_per_call,
+derived) rows plus a detail dict persisted to results/bench_details.json.
+
+Paper targets (for at-a-glance comparison; asserted loosely in tests):
+  fig1   : idle stats — median 2 min, mean ~5 min, avg 9.23 idle, 10.11% zero
+  table1 : set A1 ready 80.58% / warmup 3.98% / unused 15.44%
+  table2 : fib day coverage ~90% (clairvoyant 92%), healthy avg 10.39
+  table3 : var day coverage ~68% (clairvoyant 84%), healthy avg 4.96
+  fig5   : 10 QPS: >=95% invoked (fib day), ~95% success of invoked
+  fig7   : compute-intensive fns ~15% faster on the cluster node than the
+           commercial FaaS (we reproduce the ratio via the calibrated
+           CommercialBackend model; no AWS access in this container)
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.faas_functions import FUNCTIONS, make_graph
+from repro.core import (HarvestConfig, HarvestRuntime, TraceConfig,
+                        generate_trace, table1, trace_stats)
+
+HOUR = 3600.0
+Row = Tuple[str, float, str]
+
+
+def bench_fig1_trace(seed: int = 0) -> Tuple[List[Row], Dict]:
+    t0 = time.perf_counter()
+    cfg = TraceConfig(seed=seed)
+    ws = generate_trace(cfg)
+    st = trace_stats(ws, cfg.horizon)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(ws), 1)
+    rows = [("fig1_trace", us,
+             f"median_idle_s={st['idle_len_median_s']:.0f};avg_idle_nodes="
+             f"{st['avg_idle_nodes']:.2f};zero_share={st['zero_idle_share']:.3f}")]
+    return rows, {"fig1": st}
+
+
+def bench_table1(seed: int = 0) -> Tuple[List[Row], Dict]:
+    cfg = TraceConfig(seed=seed)
+    ws = generate_trace(cfg)
+    t0 = time.perf_counter()
+    reports = table1(ws, cfg.horizon)
+    us = (time.perf_counter() - t0) * 1e6 / len(reports)
+    rows = []
+    detail = {}
+    for r in reports:
+        rows.append((f"table1_{r.set_name}", us,
+                     f"ready={r.ready_share:.4f};warmup={r.warmup_share:.4f};"
+                     f"unused={r.unused_share:.4f};jobs={r.n_jobs}"))
+        detail[r.set_name] = r.__dict__
+    return rows, {"table1": detail}
+
+
+def _run_day(model: str, tc: TraceConfig, duration: float,
+             qps: float = 10.0) -> Tuple[Row, Dict]:
+    cfg = HarvestConfig(model=model, duration=duration, qps=qps, seed=3,
+                        non_interruptible_share=0.2)
+    t0 = time.perf_counter()
+    res = HarvestRuntime(cfg, trace_cfg=tc).run()
+    wall = time.perf_counter() - t0
+    us = wall * 1e6 / max(res.n_submitted, 1)
+    detail = {
+        "coverage": res.slurm_coverage,
+        "sim_upper_bound": res.sim_upper_bound,
+        "invoked_share": res.invoked_share,
+        "success_share": res.success_share,
+        "healthy_avg": float(np.mean(res.worker_samples["healthy"])),
+        "healthy_p25_50_75": [float(np.percentile(res.worker_samples["healthy"], p))
+                              for p in (25, 50, 75)],
+        "warming_avg": float(np.mean(res.worker_samples["warming"])),
+        "jobs_started": res.n_jobs_started,
+        "evicted": res.n_evicted,
+        "no_worker_share": res.no_worker_time_share,
+        "response_p50_s": res.response_p50,
+        "outcomes": res.outcome_counts,
+    }
+    row = (f"table{'2' if model == 'fib' else '3'}_{model}", us,
+           f"coverage={res.slurm_coverage:.4f};bound={res.sim_upper_bound:.4f};"
+           f"invoked={res.invoked_share:.4f};healthy_avg={detail['healthy_avg']:.2f}")
+    return row, detail
+
+
+def bench_table2_fib(duration: float = 6 * HOUR) -> Tuple[List[Row], Dict]:
+    # day-matched trace: Mar 17 (fib): avg 11.85 idle nodes, 0.6% zero
+    tc = TraceConfig(horizon=duration, avg_idle_nodes=11.85, full_share=0.006,
+                     seed=17)
+    row, detail = _run_day("fib", tc, duration)
+    return [row], {"table2_fib": detail}
+
+
+def bench_table3_var(duration: float = 6 * HOUR) -> Tuple[List[Row], Dict]:
+    # day-matched trace: Mar 21 (var): avg 7.38 workers, 9.44% zero states
+    tc = TraceConfig(horizon=duration, avg_idle_nodes=7.38, full_share=0.0944,
+                     seed=21)
+    row, detail = _run_day("var", tc, duration)
+    return [row], {"table3_var": detail}
+
+
+def bench_fig5_responsiveness(duration: float = 2 * HOUR) -> Tuple[List[Row], Dict]:
+    """10 QPS against the fib day, with a mixed workload (2% long calls) that
+    reproduces the paper's timeout/failure mechanisms (container saturation,
+    SIGKILL on non-interruptible calls)."""
+    tc = TraceConfig(horizon=duration, avg_idle_nodes=11.85, full_share=0.006,
+                     seed=17)
+    cfg = HarvestConfig(model="fib", duration=duration, qps=10.0, seed=5,
+                        non_interruptible_share=0.2)
+    rt = HarvestRuntime(cfg, trace_cfg=tc)
+    # salt in long-running calls (30-240 s) that saturate invoker containers —
+    # the paper's 14:30-17:00 episode where invokers hit their concurrent-
+    # container limit and invocations started timing out / failing
+    rng = np.random.default_rng(9)
+    for i, req_t in enumerate(np.arange(30.0, duration, 6.0)):
+        rt.sim.at(float(req_t), rt._submit, f"long-{i % 23}",
+                  float(rng.uniform(30.0, 240.0)), 300.0)
+
+    t0 = time.perf_counter()
+    res = rt.run()
+    wall = time.perf_counter() - t0
+    invoked = res.invoked_share
+    us = wall * 1e6 / max(res.n_submitted, 1)
+    detail = {
+        "invoked_share": invoked,
+        "success_share": res.success_share,
+        "outcomes": res.outcome_counts,
+        "response_p50_s": res.response_p50,
+        "response_p95_s": res.response_p95,
+        "gatling_p50_s": res.response_p50 + 0.75,  # client-side overhead model
+    }
+    rows = [("fig5_responsiveness", us,
+             f"invoked={invoked:.4f};success={res.success_share:.4f};"
+             f"p50_gatling_s={detail['gatling_p50_s']:.3f}")]
+    return rows, {"fig5": detail}
+
+
+def bench_fig7_single_invocation(n_iter: int = 200) -> Tuple[List[Row], Dict]:
+    """Warm single-invocation runtimes of the three compute-intensive
+    functions on this node, plus the modeled commercial-FaaS runtime (the
+    paper's measured ~15% gap drives the CommercialBackend slowdown=1.176)."""
+    adj = make_graph(512, 8, seed=1)
+    rows: List[Row] = []
+    detail = {}
+    for name, fn in FUNCTIONS.items():
+        fn(adj)  # warm
+        t0 = time.perf_counter()
+        for _ in range(n_iter):
+            fn(adj)
+        dt = (time.perf_counter() - t0) / n_iter
+        lam = dt * 1.176  # modeled AWS-Lambda-2GB runtime (paper Fig. 7 ratio)
+        rows.append((f"fig7_{name}", dt * 1e6,
+                     f"node_ms={dt*1e3:.2f};lambda_model_ms={lam*1e3:.2f};"
+                     f"speedup={lam/dt:.3f}"))
+        detail[name] = {"node_s": dt, "lambda_model_s": lam}
+    return rows, {"fig7": detail}

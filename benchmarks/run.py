@@ -1,0 +1,91 @@
+"""Benchmark driver: one function per paper table/figure + the roofline
+summary. Prints ``name,us_per_call,derived`` CSV (stdout) and writes detail
+JSON to results/bench_details.json.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+  --full : paper-length experiments (24 h days, 200-iter fig7) instead of the
+           default reduced durations.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+HOUR = 3600.0
+
+
+def bench_roofline_summary():
+    """Summarize the dry-run roofline table (results/dryrun_*.json)."""
+    rows, detail = [], {}
+    for tag, path in (("baseline", "results/dryrun_baseline.json"),
+                      ("optimized", "results/dryrun_optimized.json")):
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            recs = json.load(f)
+        # roofline terms are only meaningful for PROBED single-pod records
+        # (multi-pod passes are compile proofs without depth probes)
+        ok = [r for r in recs if r.get("status") == "ok"
+              and r.get("mesh") == "single" and "probe_compile_s" in r]
+        if not ok:
+            continue
+        fracs = [r["roofline"]["roofline_fraction"] for r in ok]
+        bns = {}
+        for r in ok:
+            bns[r["roofline"]["bottleneck"]] = bns.get(r["roofline"]["bottleneck"], 0) + 1
+        bns_s = "/".join(f"{k}:{v}" for k, v in sorted(bns.items()))
+        rows.append((f"roofline_{tag}", 0.0,
+                     f"cells={len(ok)};median_frac={sorted(fracs)[len(fracs)//2]:.4f};"
+                     f"best_frac={max(fracs):.4f};bottlenecks={bns_s}"))
+        detail[tag] = {"n_ok": len(ok),
+                       "fracs": {f"{r['arch']}/{r['shape']}/{r['mesh']}":
+                                 r["roofline"]["roofline_fraction"] for r in ok}}
+    return rows, {"roofline": detail}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from benchmarks import paper_benches as PB
+
+    day = 24 * HOUR if args.full else 6 * HOUR
+    resp = 24 * HOUR if args.full else 2 * HOUR
+    benches = {
+        "fig1": lambda: PB.bench_fig1_trace(),
+        "table1": lambda: PB.bench_table1(),
+        "table2": lambda: PB.bench_table2_fib(day),
+        "table3": lambda: PB.bench_table3_var(day),
+        "fig5": lambda: PB.bench_fig5_responsiveness(resp),
+        "fig7": lambda: PB.bench_fig7_single_invocation(200 if args.full else 50),
+        "roofline": bench_roofline_summary,
+    }
+    if args.only:
+        benches = {k: v for k, v in benches.items() if k == args.only}
+
+    all_detail = {}
+    print("name,us_per_call,derived")
+    for key, fn in benches.items():
+        t0 = time.time()
+        try:
+            rows, detail = fn()
+        except Exception as e:  # keep the harness running
+            print(f"{key},0,ERROR:{type(e).__name__}:{e}")
+            continue
+        all_detail.update(detail)
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        sys.stderr.write(f"[{key}: {time.time()-t0:.1f}s]\n")
+    os.makedirs("results", exist_ok=True)
+    with open("results/bench_details.json", "w") as f:
+        json.dump(all_detail, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

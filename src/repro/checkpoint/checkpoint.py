@@ -1,0 +1,109 @@
+"""Dependency-free sharded checkpointing with elastic restore.
+
+Layout: <dir>/step_<N>/manifest.json + arrays.npz. Arrays are stored
+full-size (gathered), keyed by their tree path, so a checkpoint written on a
+512-chip mesh restores onto 256 chips (or CPU) by re-device_put-ing with the
+*target* sharding — the elastic-resize path (distributed/elastic.py wraps
+this). Saves can run asynchronously on a background thread after a snapshot
+to host memory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "name", k))) for k in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(tree: Any, directory: str, step: int, extra: Optional[Dict] = None,
+         async_save: bool = False) -> str:
+    """Write a checkpoint; returns its path. With async_save, snapshot to host
+    first and write on a daemon thread."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}  # host snapshot
+    manifest = {
+        "step": step,
+        "extra": extra or {},
+        "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in flat.items()},
+    }
+
+    def _write():
+        np.savez(os.path.join(path, "arrays.npz"), **flat)
+        with open(os.path.join(path, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        # atomic-ish completion marker (restart safety: partial writes ignored)
+        open(os.path.join(path, "COMMITTED"), "w").close()
+
+    if async_save:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        t.join(timeout=0)  # fire and forget; wait_for_save flushes
+        _PENDING.append((path, t))
+    else:
+        _write()
+    return path
+
+
+_PENDING = []
+
+
+def wait_for_saves():
+    while _PENDING:
+        _, t = _PENDING.pop()
+        t.join()
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and \
+                os.path.exists(os.path.join(directory, name, "COMMITTED")):
+            steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(template: Any, directory: str, step: Optional[int] = None,
+            shardings: Optional[Any] = None) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``template``; place leaves with
+    ``shardings`` (same pytree structure) when given — this is how a
+    checkpoint moves between mesh shapes (elastic restore)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_keys = list(_flatten(template).keys())
+    missing = [k for k in flat_keys if k not in data]
+    if missing:
+        raise KeyError(f"checkpoint missing arrays: {missing[:5]}...")
+    leaves_by_key = {k: data[k] for k in flat_keys}
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(paths))
+    out = []
+    for (path_k, leaf), shard in zip(paths, shard_leaves):
+        key = "/".join(str(getattr(k, "key", getattr(k, "name", k))) for k in path_k)
+        arr = leaves_by_key[key]
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != template {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, shard) if shard is not None else arr)
+    return jax.tree_util.tree_unflatten(treedef, out), manifest

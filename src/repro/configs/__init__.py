@@ -1,0 +1,56 @@
+"""Registry of the 10 assigned architectures (+ shapes)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from repro.configs.base import (
+    SHAPES,
+    SHAPES_BY_NAME,
+    ModelConfig,
+    ShapeConfig,
+    cell_is_runnable,
+)
+
+_MODULES = {
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "qwen2.5-3b": "repro.configs.qwen2_5_3b",
+    "stablelm-12b": "repro.configs.stablelm_12b",
+    "qwen1.5-4b": "repro.configs.qwen1_5_4b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(_MODULES[arch_id])
+    return mod.SMOKE if smoke else mod.FULL
+
+
+def all_cells():
+    """Yield (arch_id, shape, runnable, skip_reason) for the 40 assigned cells."""
+    for arch_id in ARCH_IDS:
+        cfg = get_config(arch_id)
+        for shape in SHAPES:
+            ok, why = cell_is_runnable(cfg, shape)
+            yield arch_id, shape, ok, why
+
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "SHAPES_BY_NAME",
+    "ModelConfig",
+    "ShapeConfig",
+    "all_cells",
+    "cell_is_runnable",
+    "get_config",
+]

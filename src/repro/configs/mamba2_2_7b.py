@@ -1,0 +1,35 @@
+"""mamba2-2.7b [ssm] — SSD (state-space duality), attention-free.
+[arXiv:2405.21060]"""
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    arch_id="mamba2-2.7b",
+    family="ssm",
+    n_layers=64,
+    d_model=2560,
+    n_heads=0,
+    n_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_headdim=64,
+    ssm_expand=2,
+    ssm_chunk=256,
+)
+
+SMOKE = ModelConfig(
+    arch_id="mamba2-2.7b-smoke",
+    family="ssm",
+    n_layers=3,
+    d_model=64,
+    n_heads=0,
+    n_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=128,
+    ssm_state=16,
+    ssm_headdim=16,
+    ssm_expand=2,
+    ssm_chunk=32,
+)

@@ -1,0 +1,128 @@
+"""Modified-OpenWhisk controller: hash-based routing to a *dynamic* set of
+invokers, per-invoker topics, the global fast-lane topic, continuous health
+states, and 503 when no invoker is healthy (paper Sec. II, III-C, III-E).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List, Optional, TYPE_CHECKING
+
+from repro.core.events import Simulator
+from repro.core.queues import Request, Topic
+
+if TYPE_CHECKING:
+    from repro.core.invoker import Invoker
+
+
+def _fn_hash(fn: str) -> int:
+    return int.from_bytes(hashlib.sha1(fn.encode()).digest()[:4], "big")
+
+
+class Controller:
+    """Routes invocations; maintains the dynamic invoker list.
+
+    Standard OpenWhisk assumes the invoker set never shrinks; the paper's
+    modification — which we implement — is (1) explicit register/deregister
+    driven by the pilot-job lifecycle, (2) continuous worker-status messages
+    (state transitions here), and (3) the fast-lane hand-off on SIGTERM.
+    """
+
+    def __init__(self, sim: Simulator, queue_depth_soft_limit: int = 64):
+        self.sim = sim
+        self.fast_lane = Topic("fast-lane")
+        self.topics: Dict[int, Topic] = {}
+        self.invokers: Dict[int, "Invoker"] = {}
+        self._healthy_order: List[int] = []   # sorted ids of healthy invokers
+        self.queue_depth_soft_limit = queue_depth_soft_limit
+        self.completed: List[Request] = []
+        self.rejected_503: List[Request] = []
+        self.n_submitted = 0
+
+    # --- invoker lifecycle ------------------------------------------------
+    def register(self, inv: "Invoker"):
+        self.invokers[inv.id] = inv
+        self.topics.setdefault(inv.id, Topic(f"invoker-{inv.id}"))
+        self._healthy_order = sorted(
+            i for i, v in self.invokers.items() if v.state == "healthy")
+
+    def mark_unavailable(self, inv: "Invoker") -> int:
+        """First SIGTERM action: no new requests; move unpulled to fast lane."""
+        if inv.id in self.invokers:
+            self._healthy_order = sorted(
+                i for i, v in self.invokers.items()
+                if v.state == "healthy" and i != inv.id)
+        moved = 0
+        topic = self.topics.get(inv.id)
+        if topic:
+            moved = topic.drain_into(self.fast_lane)
+            for _ in range(moved):
+                pass
+        self._kick_all()
+        return moved
+
+    def deregister(self, inv: "Invoker"):
+        self.invokers.pop(inv.id, None)
+        topic = self.topics.pop(inv.id, None)
+        if topic and len(topic):
+            topic.drain_into(self.fast_lane)
+        self._healthy_order = sorted(
+            i for i, v in self.invokers.items() if v.state == "healthy")
+        self._kick_all()
+
+    # --- request path --------------------------------------------------------
+    def submit(self, req: Request) -> bool:
+        """Route a request. Returns False (503) when no invoker is healthy."""
+        self.n_submitted += 1
+        if not self._healthy_order:
+            req.outcome = "503"
+            self.rejected_503.append(req)
+            return False
+        req.t_invoked = self.sim.now
+        # hash routing with overload stepping (OpenWhisk-style)
+        n = len(self._healthy_order)
+        start = _fn_hash(req.fn) % n
+        chosen = None
+        for step in range(n):
+            cand = self._healthy_order[(start + step) % n]
+            if len(self.topics[cand]) < self.queue_depth_soft_limit:
+                chosen = cand
+                break
+        if chosen is None:
+            chosen = self._healthy_order[start]
+        self.topics[chosen].push(req)
+        self.sim.at(req.arrival + req.timeout, self._check_timeout, req)
+        self.invokers[chosen].kick()
+        return True
+
+    def requeue_fast(self, req: Request):
+        """SIGTERM hand-off path for pulled-but-unfinished requests."""
+        req.via_fast_lane = True
+        req.attempts += 1
+        self.fast_lane.push(req)
+        self._kick_all()
+
+    def complete(self, req: Request, outcome: str = "success"):
+        if req.outcome is None:
+            req.outcome = outcome
+            req.t_completed = self.sim.now
+            self.completed.append(req)
+
+    def _check_timeout(self, req: Request):
+        if req.outcome is None:
+            req.outcome = "timeout"
+            self.completed.append(req)
+
+    def _kick_all(self):
+        for i in self._healthy_order:
+            self.invokers[i].kick()
+
+    # --- metrics -----------------------------------------------------------------
+    def healthy_count(self) -> int:
+        return len(self._healthy_order)
+
+    def outcome_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for r in self.completed:
+            out[r.outcome] = out.get(r.outcome, 0) + 1
+        out["503"] = len(self.rejected_503)
+        return out

@@ -1,0 +1,161 @@
+"""HarvestRuntime: wires trace -> SlurmSim -> JobManager -> Controller ->
+Invokers, drives a FaaS workload, and collects the three observation
+perspectives of Sec. IV-A (OpenWhisk-level, Slurm-level, Simulation).
+
+The same objects drive *real JAX execution* when an ``executor`` callable is
+supplied (examples/harvest_serving.py): the executor runs the actual function
+(e.g. a model decode step) and returns its measured duration, which advances
+virtual time — the scheduling layer is oblivious.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cluster import SlurmSim
+from repro.core.controller import Controller
+from repro.core.coverage import simulate_coverage
+from repro.core.events import Simulator
+from repro.core.pilot import FIB_LENGTHS_MIN, JobManager
+from repro.core.queues import Request
+from repro.core.trace import IdleWindow, TraceConfig, generate_trace
+
+
+@dataclasses.dataclass
+class HarvestConfig:
+    model: str = "fib"                  # fib | var
+    duration: float = 24 * 3600.0
+    qps: float = 10.0
+    n_functions: int = 100
+    exec_time: float = 0.010
+    timeout: float = 60.0
+    sched_interval: float = 15.0        # fib backfill pass period
+    var_sched_interval: float = 90.0    # var passes are slower (Sec. V-B2)
+    var_pass_budget: int = 2            # max var placements per pass
+    grace: float = 180.0
+    seed: int = 0
+    poisson: bool = False               # paper used a constant 10 QPS rate
+    non_interruptible_share: float = 0.0  # clients opting out of interruption
+
+
+@dataclasses.dataclass
+class HarvestResult:
+    requests: List[Request]
+    n_submitted: int
+    outcome_counts: Dict[str, int]
+    invoked_share: float                # accepted by controller (not 503)
+    success_share: float                # of invoked
+    response_p50: float
+    response_p95: float
+    slurm_coverage: float
+    sim_upper_bound: float
+    worker_samples: Dict[str, np.ndarray]   # state -> counts every 10 s
+    n_jobs_started: int
+    n_evicted: int
+    no_worker_time_share: float
+
+    def summary(self) -> str:
+        oc = self.outcome_counts
+        return (f"{'':2s}coverage={self.slurm_coverage:.2%} (sim bound {self.sim_upper_bound:.2%}) "
+                f"invoked={self.invoked_share:.2%} success={self.success_share:.2%} "
+                f"healthy avg={np.mean(self.worker_samples['healthy']):.2f} "
+                f"jobs={self.n_jobs_started} evicted={self.n_evicted} "
+                f"outcomes={ {k: oc.get(k, 0) for k in ('success','timeout','503')} }")
+
+
+class HarvestRuntime:
+    def __init__(self, cfg: HarvestConfig,
+                 windows: Optional[Sequence[IdleWindow]] = None,
+                 trace_cfg: Optional[TraceConfig] = None,
+                 executor: Optional[Callable[[Request], float]] = None):
+        self.cfg = cfg
+        self.sim = Simulator()
+        self.rng = np.random.default_rng(cfg.seed + 77)
+        if windows is None:
+            tc = trace_cfg or TraceConfig(horizon=cfg.duration, seed=cfg.seed)
+            windows = generate_trace(tc)
+        self.windows = [w for w in windows if w.start < cfg.duration]
+        self.controller = Controller(self.sim)
+        self.slurm = SlurmSim(
+            self.sim, self.windows, self.controller, self.rng,
+            sched_interval=(cfg.var_sched_interval if cfg.model == "var"
+                            else cfg.sched_interval),
+            grace=cfg.grace, executor=executor,
+            # var: flexible-length sizing is too slow for the backfill loop
+            # (Sec. V-B2) — bounded per-pass placements, no plan chaining.
+            pass_budget=(cfg.var_pass_budget if cfg.model == "var" else None),
+            chain_on_exit=(cfg.model == "fib"))
+        self.manager = JobManager(self.sim, self.slurm, model=cfg.model,
+                                  horizon=cfg.duration)
+        self.requests: List[Request] = []
+        self._worker_samples: Dict[str, List[int]] = {
+            "warming": [], "healthy": [], "draining": []}
+        self.sim.at(0.0, self._sample_workers)
+        self._schedule_workload()
+
+    # --- workload ------------------------------------------------------------
+    def _schedule_workload(self):
+        cfg = self.cfg
+        if cfg.qps <= 0:
+            return
+        n = int(cfg.duration * cfg.qps)
+        if cfg.poisson:
+            gaps = self.rng.exponential(1.0 / cfg.qps, size=n)
+            times = np.cumsum(gaps)
+        else:
+            times = (np.arange(n) + 1) / cfg.qps
+        for i, t in enumerate(times):
+            if t >= cfg.duration:
+                break
+            fn = f"fn-{i % cfg.n_functions:03d}"
+            self.sim.at(float(t), self._submit, fn)
+
+    def _submit(self, fn: str, exec_time: Optional[float] = None,
+                timeout: Optional[float] = None):
+        interruptible = (self.rng.random() >= self.cfg.non_interruptible_share)
+        req = Request(fn=fn, exec_time=exec_time or self.cfg.exec_time,
+                      arrival=self.sim.now,
+                      timeout=timeout or self.cfg.timeout,
+                      interruptible=interruptible)
+        self.requests.append(req)
+        self.controller.submit(req)
+
+    def _sample_workers(self):
+        counts = {"warming": 0, "healthy": 0, "draining": 0}
+        for inv in self.slurm.all_invokers:
+            if inv.state in counts:
+                counts[inv.state] += 1
+        for k, v in counts.items():
+            self._worker_samples[k].append(v)
+        if self.sim.now < self.cfg.duration:
+            self.sim.after(10.0, self._sample_workers)
+
+    # --- run -----------------------------------------------------------------
+    def run(self) -> HarvestResult:
+        cfg = self.cfg
+        self.sim.run_until(cfg.duration + cfg.grace + 60.0)
+        # clairvoyant upper bound over the same windows (Sec. IV-A perspective 3)
+        lengths = (FIB_LENGTHS_MIN if cfg.model == "fib"
+                   else tuple(range(2, 121, 2)))
+        bound = simulate_coverage(self.windows, lengths, cfg.duration)
+        invoked = [r for r in self.requests if r.outcome != "503"]
+        done = [r for r in invoked if r.outcome == "success"]
+        rts = np.array([r.response_time for r in done]) if done else np.array([0.0])
+        ws = {k: np.array(v) for k, v in self._worker_samples.items()}
+        return HarvestResult(
+            requests=self.requests,
+            n_submitted=len(self.requests),
+            outcome_counts=self.controller.outcome_counts(),
+            invoked_share=len(invoked) / max(len(self.requests), 1),
+            success_share=len(done) / max(len(invoked), 1),
+            response_p50=float(np.percentile(rts, 50)),
+            response_p95=float(np.percentile(rts, 95)),
+            slurm_coverage=self.slurm.coverage(),
+            sim_upper_bound=bound.warmup_share + bound.ready_share,
+            worker_samples=ws,
+            n_jobs_started=self.slurm.n_started,
+            n_evicted=self.slurm.n_evicted,
+            no_worker_time_share=float(np.mean(ws["healthy"] == 0)),
+        )

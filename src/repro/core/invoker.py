@@ -1,0 +1,164 @@
+"""Invoker (worker) lifecycle inside a pilot job: warm-up -> healthy pull loop
+-> SIGTERM drain/hand-off -> exit (paper Sec. III-B/C).
+
+States: warming -> healthy -> draining -> dead. Warm-up duration follows the
+paper's measured distribution (median 12.48 s, p95 26.5 s, lognormal). The
+invoker executes functions in warm "containers" (per-function LRU; cold start
+~500 ms) with a bounded concurrency, pulling from the global fast lane before
+its own topic.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from typing import Callable, Dict, Optional, Set, TYPE_CHECKING
+
+import numpy as np
+
+from repro.core.events import Simulator
+from repro.core.queues import Request, Topic
+
+if TYPE_CHECKING:
+    from repro.core.controller import Controller
+
+_INV_IDS = itertools.count()
+
+# lognormal matched to median 12.48 s, p95 26.5 s
+WARMUP_MU = math.log(12.48)
+WARMUP_SIGMA = math.log(26.5 / 12.48) / 1.645
+
+
+class Invoker:
+    def __init__(self, sim: Simulator, controller: "Controller", *,
+                 node: int, sched_end: float, rng: np.random.Generator,
+                 concurrency: int = 16, cold_start: float = 0.5,
+                 overhead: float = 0.08, drain_margin: float = 15.0,
+                 grace: float = 180.0, max_warm_containers: int = 32,
+                 executor: Optional[Callable[[Request], float]] = None,
+                 on_exit: Optional[Callable[["Invoker"], None]] = None):
+        self.id = next(_INV_IDS)
+        self.sim = sim
+        self.controller = controller
+        self.node = node
+        self.sched_end = sched_end
+        self.rng = rng
+        self.concurrency = concurrency
+        self.cold_start = cold_start
+        self.overhead = overhead        # pull/dispatch overhead per request
+        self.drain_margin = drain_margin
+        self.grace = grace
+        self.max_warm = max_warm_containers
+        self.executor = executor        # maps request -> execution seconds
+        self.on_exit = on_exit
+        self.state = "warming"
+        self.warm_fns: Dict[str, float] = {}   # fn -> last use (LRU)
+        self.running: Set[int] = set()         # request ids in flight
+        self._running_reqs: Dict[int, tuple] = {}  # id -> (req, end_event, t_end)
+        self.t_created = sim.now
+        self.t_healthy: Optional[float] = None
+        self.t_dead: Optional[float] = None
+        self.n_executed = 0
+        self.warmup = float(rng.lognormal(WARMUP_MU, WARMUP_SIGMA))
+        sim.after(self.warmup, self._become_healthy)
+        # proactive drain before own declared time limit (timeout SIGTERM)
+        self._deadline_ev = sim.at(max(sched_end - drain_margin, sim.now),
+                                   self.sigterm, "timeout")
+
+    # --- lifecycle ------------------------------------------------------------
+    def _become_healthy(self):
+        if self.state != "warming":
+            return
+        self.state = "healthy"
+        self.t_healthy = self.sim.now
+        self.controller.register(self)
+        self.kick()
+
+    def sigterm(self, reason: str = "evict"):
+        """Paper Sec. III-C: mark unavailable, hand off queued work, interrupt
+        or finish the running invocations, deregister, exit."""
+        if self.state in ("draining", "dead"):
+            return
+        was_warming = self.state == "warming"
+        self.state = "draining"
+        self._deadline_ev.cancel()
+        if not was_warming:
+            self.controller.mark_unavailable(self)
+        # requeue running invocations that cannot finish within the grace
+        for rid in list(self._running_reqs):
+            req, ev, t_end = self._running_reqs[rid]
+            remaining = t_end - self.sim.now
+            if remaining > self.grace - self.drain_margin:
+                if req.interruptible:
+                    ev.cancel()
+                    del self._running_reqs[rid]
+                    self.running.discard(rid)
+                    self.controller.requeue_fast(req)
+                # non-interruptible long calls ride until SIGKILL (-> timeout)
+        drain_time = 2.0 + float(self.rng.random())  # de-register + flush
+        if self._running_reqs:
+            latest = max(t for (_, _, t) in self._running_reqs.values())
+            exit_at = min(max(latest, self.sim.now + drain_time),
+                          self.sim.now + self.grace)
+        else:
+            exit_at = self.sim.now + drain_time
+        self.sim.at(exit_at, self._exit)
+
+    def sigkill(self):
+        """Hard stop at the end of the grace period. Non-interruptible calls
+        that are still running die here — the 'failed during execution'
+        category of Sec. V-C."""
+        for rid in list(self._running_reqs):
+            req, ev, _ = self._running_reqs.pop(rid)
+            ev.cancel()
+            self.running.discard(rid)
+            if req.outcome is None:
+                if req.interruptible:
+                    self.controller.requeue_fast(req)
+                else:
+                    self.controller.complete(req, "failed")
+        self._exit()
+
+    def _exit(self):
+        if self.state == "dead":
+            return
+        self.state = "dead"
+        self.t_dead = self.sim.now
+        self.controller.deregister(self)
+        if self.on_exit:
+            self.on_exit(self)
+
+    # --- pull loop ---------------------------------------------------------------
+    def kick(self):
+        """Pull work if capacity allows: fast lane first, then own topic."""
+        if self.state != "healthy":
+            return
+        while len(self.running) < self.concurrency:
+            req = self.controller.fast_lane.pop()
+            if req is None:
+                topic = self.controller.topics.get(self.id)
+                req = topic.pop() if topic else None
+            if req is None:
+                return
+            if req.outcome is not None:   # e.g. already timed out
+                continue
+            self._start(req)
+
+    def _start(self, req: Request):
+        exec_time = self.executor(req) if self.executor else req.exec_time
+        cold = req.fn not in self.warm_fns
+        if cold and len(self.warm_fns) >= self.max_warm:
+            lru = min(self.warm_fns, key=self.warm_fns.get)
+            del self.warm_fns[lru]
+        self.warm_fns[req.fn] = self.sim.now
+        dur = self.overhead + (self.cold_start if cold else 0.0) + exec_time
+        t_end = self.sim.now + dur
+        ev = self.sim.at(t_end, self._finish, req)
+        self.running.add(req.id)
+        self._running_reqs[req.id] = (req, ev, t_end)
+
+    def _finish(self, req: Request):
+        self.running.discard(req.id)
+        self._running_reqs.pop(req.id, None)
+        self.n_executed += 1
+        self.controller.complete(req, "success")
+        self.kick()

@@ -1,0 +1,63 @@
+"""Kafka-topic stand-ins with identical semantics: per-invoker FIFO topics plus
+the global *fast lane* topic that every healthy invoker drains first
+(paper Sec. III-C)."""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Deque, Optional
+
+_REQ_IDS = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    fn: str
+    exec_time: float
+    arrival: float
+    timeout: float = 60.0
+    interruptible: bool = True
+    id: int = dataclasses.field(default_factory=lambda: next(_REQ_IDS))
+    attempts: int = 0
+    via_fast_lane: bool = False
+    outcome: Optional[str] = None   # success | timeout | failed | 503 | lost
+    t_invoked: Optional[float] = None
+    t_completed: Optional[float] = None
+
+    @property
+    def response_time(self) -> Optional[float]:
+        if self.t_completed is None:
+            return None
+        return self.t_completed - self.arrival
+
+
+class Topic:
+    """FIFO queue standing in for a Kafka topic."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._q: Deque[Request] = collections.deque()
+
+    def push(self, req: Request):
+        self._q.append(req)
+
+    def push_front(self, req: Request):
+        self._q.appendleft(req)
+
+    def pop(self) -> Optional[Request]:
+        return self._q.popleft() if self._q else None
+
+    def drain_into(self, other: "Topic") -> int:
+        """Move every message to another topic (SIGTERM hand-off). FIFO order
+        is preserved; returns the number of messages moved."""
+        n = len(self._q)
+        while self._q:
+            other.push(self._q.popleft())
+        return n
+
+    def __len__(self):
+        return len(self._q)
+
+    def __bool__(self):
+        return bool(self._q)

@@ -1,0 +1,49 @@
+"""Int8 error-feedback gradient compression for the DP all-reduce.
+
+The wire format is an all-gather of per-shard int8 tensors plus fp32 scales:
+collective bytes drop ~2x vs a bf16 ring all-reduce and ~4x vs fp32. The
+quantization residual is carried in an error-feedback buffer so the *average*
+gradient remains unbiased over steps (standard EF-SGD argument); the property
+test checks the residual telescopes.
+
+Use ``ef_allreduce`` inside shard_map over the DP axes; ``quantize`` /
+``dequantize`` are the pure building blocks used by tests and the serving
+hand-off (compressed KV migration — beyond-paper optimization).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8. Returns (q int8, scale f32)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(x: jnp.ndarray, err: jnp.ndarray):
+    """Error-feedback quantization: returns (q, scale, new_err)."""
+    target = x.astype(jnp.float32) + err
+    q, scale = quantize(target)
+    new_err = target - dequantize(q, scale)
+    return q, scale, new_err
+
+
+def ef_allreduce(x: jnp.ndarray, err: jnp.ndarray, axis_name: str):
+    """All-reduce-mean of x over ``axis_name`` with int8 wire format.
+    Call inside shard_map. Returns (mean f32, new_err)."""
+    q, scale, new_err = ef_compress(x, err)
+    qs = jax.lax.all_gather(q, axis_name)          # int8 on the wire
+    scales = jax.lax.all_gather(scale, axis_name)  # tiny f32 sideband
+    n = qs.shape[0]
+    summed = jnp.tensordot(scales, qs.astype(jnp.float32), axes=(0, 0))
+    return summed / n, new_err

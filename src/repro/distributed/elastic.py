@@ -1,0 +1,31 @@
+"""Elastic scaling: move a training state between mesh shapes via the
+full-size checkpoint format (checkpoint/checkpoint.py stores gathered
+arrays keyed by tree path).
+
+``reshard_restore`` restores any committed checkpoint onto a *different* mesh
+by computing the target shardings from the same path-based rules — the
+fault-tolerance story for losing (or gaining) pods mid-run: write, resize,
+restore, continue; the deterministic data pipeline guarantees identical batch
+order afterwards.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import param_shardings
+
+
+def reshard_restore(cfg: ModelConfig, template: Any, directory: str,
+                    mesh, step: Optional[int] = None) -> Tuple[Any, dict]:
+    """Restore a checkpoint onto ``mesh`` (any shape)."""
+    shardings = param_shardings(template, cfg, mesh) if mesh is not None else None
+    return ckpt.restore(template, directory, step=step, shardings=shardings)
+
+
+def dp_degree(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("data", 1) * sizes.get("pod", 1)

@@ -1,0 +1,63 @@
+"""Grouped (expert) matmul Pallas TPU kernel — megablocks-style, adapted.
+
+Contract: ``lhs`` rows are sorted by expert and each expert's row-range is a
+multiple of ``block_t`` (callers guarantee this either via the capacity-padded
+(E, C, D) dispatch buffer with C % block_t == 0, or by padding group sizes up;
+see ``repro.kernels.ops.pad_group_sizes``). Under that contract every row-tile
+belongs to exactly ONE expert, whose id arrives via scalar prefetch so the rhs
+BlockSpec index map can select the expert's weight tile — no gather, no
+dynamic slicing inside the kernel, and the MXU sees plain (bt x D) @ (D x bf)
+matmuls.
+
+TPU adaptation note: the CUDA megablocks kernel resolves row->expert inside
+the block with binary search over group offsets; on TPU we hoist that lookup
+into the (scalar-prefetched) index map, which the hardware pipelines for free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(tile_expert_ref, lhs_ref, rhs_ref, out_ref):
+    del tile_expert_ref  # consumed by the index maps
+    out_ref[...] = jax.lax.dot(
+        lhs_ref[...].astype(jnp.float32),
+        rhs_ref[0].astype(jnp.float32)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_f", "interpret"))
+def moe_gmm(lhs, rhs, tile_expert, *, block_t: int = 128, block_f: int = 128,
+            interpret: bool = False):
+    """lhs: (T, D) expert-sorted rows, T % block_t == 0; rhs: (E, D, F);
+    tile_expert: (T // block_t,) int32 expert id per row tile.
+    Returns (T, F) with row tile i multiplied by rhs[tile_expert[i]]."""
+    t, d = lhs.shape
+    e, _, f = rhs.shape
+    assert t % block_t == 0, (t, block_t)
+    pad_f = (-f) % block_f
+    if pad_f:
+        rhs = jnp.pad(rhs, ((0, 0), (0, 0), (0, pad_f)))
+    nt = t // block_t
+    nf = rhs.shape[2] // block_f
+    out = pl.pallas_call(
+        _gmm_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nt, nf),
+            in_specs=[
+                pl.BlockSpec((block_t, d), lambda it, jf, te: (it, 0)),
+                pl.BlockSpec((1, d, block_f), lambda it, jf, te: (te[it], 0, jf)),
+            ],
+            out_specs=pl.BlockSpec((block_t, block_f), lambda it, jf, te: (it, jf)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((t, rhs.shape[2]), lhs.dtype),
+        interpret=interpret,
+    )(tile_expert, lhs, rhs)
+    if pad_f:
+        out = out[:, :f]
+    return out

@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the mathematical specification the kernel must match
+(asserted via assert_allclose across shape/dtype sweeps in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-5):
+    """x: (..., D); w: (D,)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None, scale: Optional[float] = None):
+    """q: (B,H,Sq,D); k,v: (B,KV,Sk,D) with H % KV == 0. Returns (B,H,Sq,D)."""
+    b, h, sq, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, kv, g, sq, d)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def moe_gmm_ref(lhs, rhs, group_sizes):
+    """Grouped matmul. lhs: (T,D) rows sorted by group; rhs: (E,D,F);
+    group_sizes: (E,) int32 summing to <= T (tail rows multiply by group E-1's
+    zero region semantics: they belong to no group and must produce 0 only if
+    marked; here we define tail rows as belonging to the last group).
+    Returns (T,F) where row t uses rhs[g(t)]."""
+    t = lhs.shape[0]
+    ends = jnp.cumsum(group_sizes)
+    row_group = jnp.searchsorted(ends, jnp.arange(t), side="right")
+    row_group = jnp.minimum(row_group, rhs.shape[0] - 1)
+    return jnp.einsum("td,tdf->tf", lhs.astype(jnp.float32),
+                      rhs.astype(jnp.float32)[row_group]).astype(lhs.dtype)
+
+
+def ssd_ref(x, dt, a, b_mat, c_mat):
+    """Naive O(S^2)-free sequential SSD recurrence (the slow-but-obvious oracle).
+
+    x: (B,S,H,P); dt: (B,S,H); a: (H,); b_mat/c_mat: (B,S,G,N), H % G == 0.
+    Returns (y (B,S,H,P) fp32, final_state (B,H,P,N) fp32).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    bh = jnp.repeat(b_mat.astype(jnp.float32), rep, axis=2)
+    ch = jnp.repeat(c_mat.astype(jnp.float32), rep, axis=2)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        da = jnp.exp(dt_t * af[None, :])
+        state = state * da[..., None, None] + jnp.einsum("bh,bhn,bhp->bhpn", dt_t, b_t, x_t)
+        y = jnp.einsum("bhn,bhpn->bhp", c_t, state)
+        return state, y
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final, ys = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+         jnp.moveaxis(bh, 1, 0), jnp.moveaxis(ch, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), final

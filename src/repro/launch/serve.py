@@ -1,0 +1,57 @@
+"""Serving driver: stand up a ServingEngine for a (reduced) arch and run
+batched generate requests — the FaaS function an HPC-Whisk invoker hosts.
+The FULL-config serve_step is exercised by launch/dryrun.py (decode cells).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serving.batching import GenRequest, SlotBatcher
+from repro.serving.engine import ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--batch-slots", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServingEngine(cfg, params,
+                           max_seq=args.prompt_len + args.new_tokens + 8)
+    rng = np.random.default_rng(0)
+    batcher = SlotBatcher(args.batch_slots)
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size, size=args.prompt_len).tolist()
+        batcher.add(GenRequest(id=i, prompt=prompt, max_new=args.new_tokens))
+
+    t0 = time.time()
+    # simple loop: run each active slot's request to completion batched
+    while batcher.active() or batcher.waiting:
+        active = batcher.active()
+        prompts = np.stack([np.array(r.prompt, np.int32) for r in active.values()])
+        outs = engine.generate(prompts, args.new_tokens)
+        for (slot, req), row in zip(active.items(), outs):
+            req.generated = row.tolist()
+            req.done = True
+            batcher.finished.append(req)
+            batcher.slots[slot] = None
+        batcher._fill()
+    dt = time.time() - t0
+    n_tok = args.requests * args.new_tokens
+    print(f"served {args.requests} requests, {n_tok} tokens "
+          f"in {dt:.1f}s ({n_tok/dt:.1f} tok/s on CPU, reduced config)")
+
+
+if __name__ == "__main__":
+    main()

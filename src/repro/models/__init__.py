@@ -1,0 +1,19 @@
+from repro.models.model import (
+    cache_spec,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+__all__ = [
+    "cache_spec",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "prefill",
+]

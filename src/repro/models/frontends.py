@@ -1,0 +1,47 @@
+"""Modality frontend STUBS (per assignment: [audio]/[vlm] entries specify the
+transformer backbone only; the frontend supplies precomputed embeddings).
+
+These helpers fabricate deterministic frame/patch embeddings for smoke tests
+and examples; ``launch.dryrun.input_specs`` supplies the matching
+ShapeDtypeStructs for the full configs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def audio_frames(rng, cfg: ModelConfig, batch: int, seq_len: int):
+    """Precomputed conv-feature frame embeddings (stub for the wav2vec2/HuBERT
+    conv feature encoder): (B, S, D)."""
+    return jax.random.normal(rng, (batch, seq_len, cfg.d_model), jnp.bfloat16)
+
+
+def vision_patches(rng, cfg: ModelConfig, batch: int):
+    """Precomputed InternViT patch embeddings already projected to the LLM
+    width (stub for the ViT + MLP projector): (B, F, D)."""
+    return jax.random.normal(rng, (batch, cfg.frontend_seq, cfg.d_model), jnp.bfloat16)
+
+
+def make_batch(rng, cfg: ModelConfig, batch: int, seq_len: int, with_labels: bool = True):
+    """Family-appropriate random batch for smoke tests/examples."""
+    k1, k2, k3 = jax.random.split(rng, 3)
+    out = {}
+    if cfg.frontend == "audio":
+        out["frames"] = audio_frames(k1, cfg, batch, seq_len)
+        if with_labels:
+            out["labels"] = jax.random.randint(k2, (batch, seq_len), 0, cfg.vocab_size)
+    elif cfg.frontend == "vision":
+        text_len = seq_len - cfg.frontend_seq
+        assert text_len > 0, (seq_len, cfg.frontend_seq)
+        out["vision_embeds"] = vision_patches(k1, cfg, batch)
+        out["tokens"] = jax.random.randint(k2, (batch, text_len), 0, cfg.vocab_size)
+        if with_labels:
+            out["labels"] = jax.random.randint(k3, (batch, text_len), 0, cfg.vocab_size)
+    else:
+        out["tokens"] = jax.random.randint(k1, (batch, seq_len), 0, cfg.vocab_size)
+        if with_labels:
+            out["labels"] = jax.random.randint(k2, (batch, seq_len), 0, cfg.vocab_size)
+    return out

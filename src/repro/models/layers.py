@@ -1,0 +1,125 @@
+"""Shared building blocks: norms, MLPs, rotary embeddings, token embedding.
+
+Everything is purely functional: params are nested dicts of jnp arrays, and
+each layer exposes ``init(rng, cfg) -> params`` and ``apply(params, x, ...)``.
+Stacked (scan-over-layers) variants simply carry a leading layer axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def trunc_normal(rng, shape, scale, dtype):
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+# --- norms ------------------------------------------------------------------
+def rms_norm(x, weight, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * weight.astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * weight.astype(dt) + bias.astype(dt)
+
+
+def gated_rms_norm(x, gate, weight, eps: float):
+    """Mamba2 RMSNormGated: norm(x * silu(gate)) * weight."""
+    return rms_norm(x * jax.nn.silu(gate.astype(x.dtype)), weight, eps)
+
+
+def _shard(cfg: ModelConfig, x, *axes):
+    if not cfg.shard_activations:
+        return x
+    from repro.distributed.sharding import maybe_shard
+    return maybe_shard(x, *axes)
+
+
+# --- dense / SwiGLU MLP -----------------------------------------------------
+def init_mlp(rng, cfg: ModelConfig, d_ff: int, n_stack: int | None = None):
+    pd = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    lead = () if n_stack is None else (n_stack,)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s_in = d ** -0.5
+    s_out = d_ff ** -0.5
+    p = {
+        "w_up": trunc_normal(k2, lead + (d, d_ff), s_in, pd),
+        "w_down": trunc_normal(k3, lead + (d_ff, d), s_out, pd),
+    }
+    if cfg.act == "silu":
+        p["w_gate"] = trunc_normal(k1, lead + (d, d_ff), s_in, pd)
+    return p
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    dt = x.dtype
+    x = _shard(cfg, x, ("pod", "data"), None, None)
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+    if cfg.act == "silu":
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    h = _shard(cfg, h, ("pod", "data"), None, "model")
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))
+    return _shard(cfg, out, ("pod", "data"), None, None)
+
+
+# --- rotary embeddings ------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, Dh); positions: (B, S) int32. Split-half convention."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)  # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B,S,dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos_emb(positions, d_model: int):
+    """(B,S) -> (B,S,D) classic sin/cos embedding (hubert frontend stub)."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --- embeddings -------------------------------------------------------------
+def init_embedding(rng, cfg: ModelConfig):
+    pd = jnp.dtype(cfg.param_dtype)
+    return {"tokens": trunc_normal(rng, (cfg.vocab_padded, cfg.d_model), 0.02, pd)}
+
+
+def embed_tokens(p, tokens, cfg: ModelConfig):
+    return jnp.take(p["tokens"].astype(cfg.compute_dtype), tokens, axis=0)
+
+
+def logits_from_hidden(head_w, hidden, cfg: ModelConfig):
+    """hidden (B,S,D) -> logits (B,S,Vpad) with padded columns masked."""
+    logits = jnp.einsum("bsd,dv->bsv", hidden, head_w.astype(hidden.dtype))
+    logits = logits.astype(jnp.float32)
+    if cfg.shard_activations:
+        from repro.distributed.sharding import maybe_shard
+        logits = maybe_shard(logits, ("pod", "data"), None, "model")
+    if cfg.vocab_padded != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e9, logits)
+    return logits

@@ -1,0 +1,152 @@
+"""Top-level model API: init / forward / loss / prefill / decode.
+
+Batch conventions (see also ``launch.dryrun.input_specs``):
+  train   : {"tokens": (B,S) i32, "labels": (B,S) i32}           [LM]
+            {"tokens": (B,S-F), "vision_embeds": (B,F,D), "labels": (B,S-F)} [vlm]
+            {"frames": (B,S,D) bf16, "labels": (B,S) i32}        [audio]
+  prefill : same inputs minus labels -> (logits_last, cache)
+  decode  : {"token": (B,1) i32, "cache": pytree, "pos": scalar} -> (logits, cache)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.models.layers import embed_tokens, init_embedding, logits_from_hidden, trunc_normal
+
+
+def init_params(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    k_embed, k_stack, k_head = jax.random.split(rng, 3)
+    params: Dict[str, Any] = {}
+    if cfg.frontend != "audio":
+        params["embed"] = init_embedding(k_embed, cfg)
+    params["stack"] = transformer.init_stack(k_stack, cfg)
+    params["final_norm"] = transformer._init_norm(cfg, ())
+    if not cfg.tie_embeddings:
+        pd = jnp.dtype(cfg.param_dtype)
+        params["lm_head"] = trunc_normal(k_head, (cfg.d_model, cfg.vocab_padded),
+                                         cfg.d_model ** -0.5, pd)
+    return params
+
+
+def _head_weight(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["tokens"].T
+    return params["lm_head"]
+
+
+def _embed_inputs(params, batch: Dict[str, Any], cfg: ModelConfig):
+    """Returns (hidden (B,S,D), positions (B,S))."""
+    if cfg.frontend == "audio":
+        x = batch["frames"].astype(cfg.compute_dtype)
+        b, s, _ = x.shape
+    elif cfg.frontend == "vision":
+        tok = embed_tokens(params["embed"], batch["tokens"], cfg)
+        vis = batch["vision_embeds"].astype(cfg.compute_dtype)
+        x = jnp.concatenate([vis, tok], axis=1)
+        b, s, _ = x.shape
+    else:
+        x = embed_tokens(params["embed"], batch["tokens"], cfg)
+        b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.shard_activations:
+        from repro.distributed.sharding import maybe_shard
+        x = maybe_shard(x, ("pod", "data"), None, None)
+    return x, positions
+
+
+def forward(params, batch: Dict[str, Any], cfg: ModelConfig):
+    """Full-sequence forward -> (logits (B,S,Vpad) fp32, aux)."""
+    x, positions = _embed_inputs(params, batch, cfg)
+    x, aux = transformer.stack_forward(params["stack"], x, positions, cfg)
+    x = transformer._norm(x, params["final_norm"], cfg)
+    if cfg.frontend == "vision":
+        x = x[:, batch["vision_embeds"].shape[1]:]  # logits on text positions only
+    logits = logits_from_hidden(_head_weight(params, cfg), x, cfg)
+    return logits, aux
+
+
+def loss_fn(params, batch: Dict[str, Any], cfg: ModelConfig, lb_coef: float = 0.01):
+    """Mean next-token (or frame-label) CE + MoE load-balance aux."""
+    logits, aux = forward(params, batch, cfg)
+    labels = batch["labels"]
+    if cfg.is_autoregressive:
+        logits = logits[:, :-1]
+        labels = labels[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    if cfg.shard_activations:
+        # partition-friendly CE: take_along_axis over a vocab-sharded logp
+        # makes GSPMD batch-replicate; a masked reduction stays sharded on
+        # both batch and vocab (tiny stat all-reduces only).
+        onehot = (jnp.arange(logits.shape[-1])[None, None, :]
+                  == labels[..., None])
+        ll = jnp.sum(jnp.where(onehot, logp, 0.0), axis=-1)
+    else:
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    ce = -jnp.mean(ll)
+    total = ce + lb_coef * aux["lb_loss"]
+    metrics = {"ce": ce, "lb_loss": aux["lb_loss"], "loss": total}
+    return total, metrics
+
+
+def prefill(params, batch: Dict[str, Any], cfg: ModelConfig):
+    """Forward + cache. Returns (last-position logits (B,Vpad), cache)."""
+    x, positions = _embed_inputs(params, batch, cfg)
+    x, cache = transformer.stack_prefill(params["stack"], x, positions, cfg)
+    x = transformer._norm(x, params["final_norm"], cfg)
+    logits = logits_from_hidden(_head_weight(params, cfg), x[:, -1:], cfg)
+    return logits[:, 0], cache
+
+
+def decode_step(params, token, cache, pos, cfg: ModelConfig):
+    """One decode step. token: (B,1) i32; pos: scalar i32 (current position).
+    Returns (logits (B,Vpad) fp32, new_cache)."""
+    x = embed_tokens(params["embed"], token, cfg)
+    x, cache = transformer.stack_decode(params["stack"], x, cache, pos, cfg)
+    x = transformer._norm(x, params["final_norm"], cfg)
+    logits = logits_from_hidden(_head_weight(params, cfg), x, cfg)
+    return logits[:, 0], cache
+
+
+# --- cache construction ---------------------------------------------------------
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    """ShapeDtypeStruct pytree for a decode cache of capacity ``seq_len``."""
+    from repro.models.attention import init_kv_cache_shape
+
+    def sds(shape, dtype=None):
+        return jax.ShapeDtypeStruct(shape, dtype or cfg.compute_dtype)
+
+    out: Dict[str, Any] = {}
+    for seg in transformer.segments_for(cfg):
+        if seg.kind in ("dense", "moe"):
+            per = init_kv_cache_shape(cfg, batch, seq_len)
+            if cfg.use_mla:
+                out[seg.name] = {"c": sds((seg.n,) + per)}
+            else:
+                out[seg.name] = {"k": sds((seg.n,) + per), "v": sds((seg.n,) + per)}
+        elif seg.kind == "ssm":
+            out[seg.name] = {
+                "state": sds((seg.n, batch, cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+                             jnp.float32),
+                "conv": sds((seg.n, batch, cfg.d_conv - 1, cfg.conv_dim), cfg.compute_dtype),
+            }
+        elif seg.kind == "hybrid_group":
+            per = init_kv_cache_shape(cfg, batch, seq_len)
+            out[seg.name] = {
+                "state": sds((seg.n, cfg.attn_every, batch, cfg.n_ssm_heads,
+                              cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+                "conv": sds((seg.n, cfg.attn_every, batch, cfg.d_conv - 1, cfg.conv_dim),
+                            cfg.compute_dtype),
+                "k": sds((seg.n,) + per),
+                "v": sds((seg.n,) + per),
+            }
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    """Zero-filled decode cache."""
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_spec(cfg, batch, seq_len))

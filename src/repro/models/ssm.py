@@ -1,0 +1,198 @@
+"""Mamba2 (SSD — state-space duality) block: chunked jnp reference path.
+
+The chunked algorithm follows the Mamba2 paper: within-chunk quadratic
+("attention-like") term + cross-chunk linear state recurrence. The Pallas
+kernel in ``repro.kernels.ssd`` implements the within-chunk term with VMEM
+block tiling; this module is the XLA path used by the dry-run and the oracle
+the kernel is validated against.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import gated_rms_norm, trunc_normal
+
+NEG_INF = -1e9
+
+
+def init_mamba(rng, cfg: ModelConfig, n_stack: Optional[int] = None):
+    pd = jnp.dtype(cfg.param_dtype)
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.n_ssm_heads
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    lead = () if n_stack is None else (n_stack,)
+    ks = jax.random.split(rng, 4)
+    d_in_proj = 2 * di + 2 * gn + h  # [z, xBC, dt]
+    p = {
+        "in_proj": trunc_normal(ks[0], lead + (d, d_in_proj), d ** -0.5, pd),
+        "conv_w": trunc_normal(ks[1], lead + (cfg.conv_dim, cfg.d_conv), cfg.d_conv ** -0.5, pd),
+        "conv_b": jnp.zeros(lead + (cfg.conv_dim,), pd),
+        "A_log": jnp.zeros(lead + (h,), pd),          # A = -exp(A_log) = -1
+        "dt_bias": jnp.full(lead + (h,), -2.0, pd),   # softplus(-2) ~ 0.13
+        "D_skip": jnp.ones(lead + (h,), pd),
+        "norm_w": jnp.ones(lead + (di,), pd),
+        "out_proj": trunc_normal(ks[2], lead + (di, d), di ** -0.5, pd),
+    }
+    return p
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,C); w: (C,W); b: (C,)."""
+    c, width = w.shape
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w.T[:, None, :].astype(x.dtype),  # (W, 1, C)
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c)
+    return out + b.astype(x.dtype)
+
+
+def _segsum(a):
+    """a: (..., Q) -> (..., Q, Q) with out[i,j] = sum_{j<k<=i} a[k], -inf above diag."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, NEG_INF)
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int, initial_state=None):
+    """SSD scan.
+
+    x: (B,S,H,P) inputs; dt: (B,S,H) positive step sizes; a: (H,) negative;
+    b_mat, c_mat: (B,S,G,N). Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    All math in fp32 for stability.
+    """
+    bsz, s, h, pdim = x.shape
+    g = b_mat.shape[2]
+    n = b_mat.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    f32 = jnp.float32
+    x = x.astype(f32)
+    dt = dt.astype(f32)
+    rep = h // g
+    bh = jnp.repeat(b_mat.astype(f32), rep, axis=2)  # (B,S,H,N)
+    ch = jnp.repeat(c_mat.astype(f32), rep, axis=2)
+    da = dt * a.astype(f32)[None, None, :]  # (B,S,H)
+
+    def to_chunks(t):
+        return t.reshape((bsz, nc, chunk) + t.shape[2:])
+
+    xc, dtc, dac, bc, cc = map(to_chunks, (x, dt, da, bh, ch))
+    x_dt = xc * dtc[..., None]                       # (B,C,Q,H,P)
+    da_h = jnp.moveaxis(dac, -1, 1)                  # (B,H,C,Q)
+    da_cs = jnp.cumsum(da_h, axis=-1)                # (B,H,C,Q)
+    # 1) within-chunk (quadratic) term
+    ell = jnp.exp(_segsum(da_h))                     # (B,H,C,Q,Q)
+    y_diag = jnp.einsum("bcqhn,bckhn,bhcqk,bckhp->bcqhp", cc, bc, ell, x_dt)
+    # 2) per-chunk final states
+    decay = jnp.exp(da_cs[..., -1:] - da_cs)         # (B,H,C,Q)
+    states = jnp.einsum("bckhn,bhck,bckhp->bchpn", bc, decay, x_dt)
+    # 3) cross-chunk recurrence over states
+    chunk_decay = jnp.exp(da_cs[..., -1])            # (B,H,C)
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, h, pdim, n), f32)
+
+    def step(carry, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit the state *entering* this chunk
+
+    chunk_states = jnp.moveaxis(states, 1, 0)        # (C,B,H,P,N)
+    chunk_decays = jnp.moveaxis(chunk_decay, -1, 0)  # (C,B,H)
+    final_state, prev_states = jax.lax.scan(step, initial_state.astype(f32),
+                                            (chunk_states, chunk_decays))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)    # (B,C,H,P,N)
+    # 4) contribution of entering state to each chunk position
+    state_decay = jnp.exp(da_cs)                     # (B,H,C,Q)
+    y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp", cc, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(bsz, s, h, pdim)
+    return y, final_state
+
+
+def ssd_decode_step(state, x, dt, a, b_mat, c_mat):
+    """Single-token recurrence. state: (B,H,P,N); x: (B,H,P); dt: (B,H);
+    b_mat/c_mat: (B,G,N). Returns (y (B,H,P), new_state)."""
+    f32 = jnp.float32
+    h = x.shape[1]
+    g = b_mat.shape[1]
+    rep = h // g
+    bh = jnp.repeat(b_mat.astype(f32), rep, axis=1)  # (B,H,N)
+    ch = jnp.repeat(c_mat.astype(f32), rep, axis=1)
+    da = jnp.exp(dt.astype(f32) * a.astype(f32)[None, :])      # (B,H)
+    upd = jnp.einsum("bh,bhn,bhp->bhpn", dt.astype(f32), bh, x.astype(f32))
+    new_state = state.astype(f32) * da[..., None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", ch, new_state)
+    return y, new_state
+
+
+def _split_in_proj(zxbcdt, cfg: ModelConfig):
+    di, gn, h = cfg.d_inner, cfg.ssm_ngroups * cfg.ssm_state, cfg.n_ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn:]
+    return z, xbc, dt
+
+
+def mamba_block(p, u, cfg: ModelConfig, initial_state=None):
+    """Full-sequence Mamba2 block. u: (B,S,D) -> (y, final_state, conv_tail).
+
+    Sequences that are not a multiple of ``ssm_chunk`` are zero-padded; padded
+    positions get dt=0 so they neither emit output nor advance the state.
+    """
+    bsz, s, _ = u.shape
+    dtc = u.dtype
+    zxbcdt = jnp.einsum("bsd,de->bse", u, p["in_proj"].astype(dtc))
+    z, xbc, dt_raw = _split_in_proj(zxbcdt, cfg)
+    conv_tail = xbc[:, -(cfg.d_conv - 1):, :]  # for serving handoff
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    di, gn = cfg.d_inner, cfg.ssm_ngroups * cfg.ssm_state
+    x = xbc[..., :di].reshape(bsz, s, cfg.n_ssm_heads, cfg.ssm_headdim)
+    b_mat = xbc[..., di:di + gn].reshape(bsz, s, cfg.ssm_ngroups, cfg.ssm_state)
+    c_mat = xbc[..., di + gn:].reshape(bsz, s, cfg.ssm_ngroups, cfg.ssm_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    pad = (-s) % cfg.ssm_chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # dt=0 => identity step
+    y, final_state = ssd_chunked(x, dt, a, b_mat, c_mat, cfg.ssm_chunk, initial_state)
+    y = y + x.astype(jnp.float32) * p["D_skip"].astype(jnp.float32)[None, None, :, None]
+    if pad:
+        y = y[:, :s]
+    y = y.reshape(bsz, s, di).astype(dtc)
+    y = gated_rms_norm(y, z, p["norm_w"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dtc)), final_state, conv_tail
+
+
+def mamba_decode(p, u, ssm_state, conv_state, cfg: ModelConfig):
+    """One-token decode. u: (B,1,D); ssm_state: (B,H,P,N);
+    conv_state: (B, d_conv-1, conv_dim) previous raw xBC inputs.
+    Returns (y (B,1,D), new_ssm_state, new_conv_state)."""
+    bsz = u.shape[0]
+    dtc = u.dtype
+    zxbcdt = jnp.einsum("bsd,de->bse", u, p["in_proj"].astype(dtc))
+    z, xbc_new, dt_raw = _split_in_proj(zxbcdt, cfg)
+    window = jnp.concatenate([conv_state, xbc_new], axis=1)  # (B, d_conv, C)
+    new_conv_state = window[:, 1:, :]
+    conv_out = jnp.einsum("bwc,cw->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(conv_out)[:, None, :].astype(dtc)  # (B,1,C)
+    di, gn = cfg.d_inner, cfg.ssm_ngroups * cfg.ssm_state
+    x = xbc[:, 0, :di].reshape(bsz, cfg.n_ssm_heads, cfg.ssm_headdim)
+    b_mat = xbc[:, 0, di:di + gn].reshape(bsz, cfg.ssm_ngroups, cfg.ssm_state)
+    c_mat = xbc[:, 0, di + gn:].reshape(bsz, cfg.ssm_ngroups, cfg.ssm_state)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, new_state = ssd_decode_step(ssm_state, x, dt, a, b_mat, c_mat)
+    y = y + x.astype(jnp.float32) * p["D_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, 1, di).astype(dtc)
+    y = gated_rms_norm(y, z, p["norm_w"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dtc)), new_state, new_conv_state

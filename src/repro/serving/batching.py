@@ -1,0 +1,58 @@
+"""Slot-based continuous batching for the serving engine: requests occupy
+fixed batch slots; finished slots are refilled without stopping the decode
+loop. Used by the harvest-serving example; kept engine-agnostic."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class GenRequest:
+    id: int
+    prompt: List[int]
+    max_new: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class SlotBatcher:
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.slots: List[Optional[GenRequest]] = [None] * n_slots
+        self.waiting: List[GenRequest] = []
+        self.finished: List[GenRequest] = []
+
+    def add(self, req: GenRequest):
+        self.waiting.append(req)
+        self._fill()
+
+    def _fill(self):
+        for i in range(self.n_slots):
+            if self.slots[i] is None and self.waiting:
+                self.slots[i] = self.waiting.pop(0)
+
+    def active(self) -> Dict[int, GenRequest]:
+        return {i: r for i, r in enumerate(self.slots) if r is not None}
+
+    def step(self, emit: Callable[[GenRequest], int]):
+        """Advance every active slot by one token via ``emit``."""
+        for i, req in list(self.active().items()):
+            tok = emit(req)
+            req.generated.append(tok)
+            if len(req.generated) >= req.max_new:
+                req.done = True
+                self.finished.append(req)
+                self.slots[i] = None
+        self._fill()
+
+    def drain(self) -> List[GenRequest]:
+        """SIGTERM hand-off: return all unfinished work (waiting + in-slot)
+        for fast-lane requeue; slots are cleared."""
+        out = list(self.waiting)
+        self.waiting.clear()
+        for i, r in enumerate(self.slots):
+            if r is not None:
+                out.append(r)
+                self.slots[i] = None
+        return out

@@ -1,0 +1,52 @@
+"""Train step factory: loss + grad + AdamW update, with optional microbatch
+gradient accumulation (lax.scan over microbatches) and remat selected via the
+model config. The returned function is pure and jit/pjit-friendly; the
+launcher decides in/out shardings.
+
+Straggler note (1000+-node posture): steps are synchronous SPMD — per-step
+work is identical across DP ranks by construction (fixed-shape batches from
+the deterministic pipeline), so stragglers are hardware-level; mitigation is
+checkpoint/restart plus the harvest layer backfilling drained capacity.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import loss_fn
+from repro.training.optimizer import OptimizerConfig, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                    n_microbatches: int = 1):
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, cfg)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch) -> Tuple[Any, Any, Dict]:
+        if n_microbatches == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                return x.reshape((n_microbatches, x.shape[0] // n_microbatches)
+                                 + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                loss, metrics, grads = grads_of(params, mb)
+                acc_g, acc_l = acc
+                return (jax.tree.map(jnp.add, acc_g, grads), acc_l + loss), metrics
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), ms = jax.lax.scan(body, (zero, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            loss = loss_sum / n_microbatches
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+        new_params, new_opt, opt_metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics = dict(metrics, **opt_metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    return train_step

@@ -1,0 +1,189 @@
+"""Behaviour tests for the paper's harvest layer (trace, coverage, DES stack,
+controller/invoker hand-off, Alg. 1 wrapper)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CommercialBackend,
+    Controller,
+    FaaSWrapper,
+    HarvestConfig,
+    HarvestRuntime,
+    Invoker,
+    JOB_LENGTH_SETS,
+    Request,
+    Simulator,
+    TraceConfig,
+    generate_trace,
+    simulate_coverage,
+    trace_stats,
+)
+from repro.core.coverage import greedy_fill
+from repro.core.trace import IdleWindow
+
+HOUR = 3600.0
+
+
+# --- trace calibration (Fig. 1 / Sec. I) --------------------------------------
+def test_trace_matches_paper_statistics():
+    cfg = TraceConfig(seed=0)
+    ws = generate_trace(cfg)
+    st = trace_stats(ws, cfg.horizon)
+    assert abs(st["idle_len_median_s"] - 120) < 30          # median ~2 min
+    assert abs(st["idle_len_p75_s"] - 240) < 60             # p75 ~4 min
+    assert 240 < st["idle_len_mean_s"] < 400                # mean ~5 min
+    assert abs(st["avg_idle_nodes"] - 9.23) < 1.5
+    assert abs(st["zero_idle_share"] - 0.1011) < 0.035
+    assert 1200 < st["idle_surface_node_hours"] < 2000      # ~37k core-h / 24
+
+
+def test_trace_windows_never_overlap_per_node():
+    ws = generate_trace(TraceConfig(horizon=2 * 24 * HOUR, seed=1))
+    by_node = {}
+    for w in ws:
+        by_node.setdefault(w.node, []).append(w)
+    for node, lst in by_node.items():
+        lst.sort(key=lambda w: w.start)
+        for a, b in zip(lst, lst[1:]):
+            assert a.end <= b.start + 1e-6, node
+
+
+# --- coverage simulator (Table I) -----------------------------------------------
+def test_greedy_fill_longest_first():
+    jobs = greedy_fill(21 * 60, [m * 60 for m in JOB_LENGTH_SETS["A1"]])
+    assert [j / 60 for j in jobs] == [14, 6]  # paper's own example (Sec. IV-B)
+
+
+def test_table1_reproduces_paper_orderings():
+    cfg = TraceConfig(seed=0)
+    ws = generate_trace(cfg)
+    reports = {name: simulate_coverage(ws, lengths, cfg.horizon, set_name=name)
+               for name, lengths in JOB_LENGTH_SETS.items()}
+    # paper Table I: C2 has fewest jobs + highest ready; B most jobs + lowest
+    assert reports["C2"].n_jobs == min(r.n_jobs for r in reports.values())
+    assert reports["B"].n_jobs == max(r.n_jobs for r in reports.values())
+    assert reports["C2"].ready_share == max(r.ready_share for r in reports.values())
+    a1 = reports["A1"]
+    assert abs(a1.ready_share - 0.8058) < 0.04              # 80.58% +- 4pp
+    assert abs(a1.warmup_share - 0.0398) < 0.012
+    assert abs(a1.unused_share - 0.1544) < 0.04
+    # unused share identical across sets (2-min slot granularity)
+    u = {round(r.unused_share, 9) for r in reports.values()}
+    assert len(u) == 1
+
+
+# --- DES stack ---------------------------------------------------------------------
+def _mini_windows():
+    return [
+        IdleWindow(node=0, start=10.0, end=910.0, predicted_end=900.0),
+        IdleWindow(node=1, start=50.0, end=450.0, predicted_end=500.0),
+        IdleWindow(node=0, start=1000.0, end=1300.0, predicted_end=1350.0),
+    ]
+
+
+def test_harvest_mini_end_to_end():
+    cfg = HarvestConfig(duration=1400.0, qps=2.0, exec_time=0.01, seed=0)
+    rt = HarvestRuntime(cfg, windows=_mini_windows())
+    res = rt.run()
+    assert res.n_jobs_started >= 3
+    oc = res.outcome_counts
+    assert oc.get("success", 0) > 0
+    # conservation: every request has exactly one outcome
+    assert all(r.outcome is not None for r in res.requests)
+    n = sum(v for k, v in oc.items())
+    assert n == len(res.requests)
+
+
+def test_eviction_triggers_fast_lane_handoff():
+    """A preempted invoker's queued work must be re-executed elsewhere."""
+    sim = Simulator()
+    ctrl = Controller(sim)
+    rng = np.random.default_rng(0)
+    inv1 = Invoker(sim, ctrl, node=0, sched_end=4000.0, rng=rng)
+    inv2 = Invoker(sim, ctrl, node=1, sched_end=4000.0, rng=rng)
+    sim.run_until(40.0)  # both healthy
+    assert ctrl.healthy_count() == 2
+    # 40 distinct long-ish requests spread over both invokers
+    reqs = [Request(fn=f"f{i}", exec_time=5.0, arrival=sim.now, timeout=600.0)
+            for i in range(40)]
+    for r in reqs:
+        ctrl.submit(r)
+    sim.run_until(41.0)
+    inv1.sigterm("evict")       # preempt one of them immediately
+    sim.after(180.0, inv1.sigkill)
+    sim.run_until(3600.0)
+    outcomes = {r.outcome for r in reqs}
+    assert outcomes == {"success"}, outcomes
+    # the survivor executed the majority of the work
+    assert inv2.n_executed > inv1.n_executed
+
+
+def test_no_healthy_invoker_yields_503():
+    sim = Simulator()
+    ctrl = Controller(sim)
+    req = Request(fn="f", exec_time=0.01, arrival=0.0)
+    assert ctrl.submit(req) is False
+    assert req.outcome == "503"
+
+
+def test_draining_invoker_accepts_no_new_requests():
+    sim = Simulator()
+    ctrl = Controller(sim)
+    rng = np.random.default_rng(0)
+    inv = Invoker(sim, ctrl, node=0, sched_end=4000.0, rng=rng)
+    sim.run_until(40.0)
+    inv.sigterm("evict")
+    req = Request(fn="f", exec_time=0.01, arrival=sim.now)
+    assert ctrl.submit(req) is False  # 503: nobody healthy
+
+
+def test_fib_beats_var_coverage():
+    """Paper's headline comparison: fib ~90% vs var ~68% on their days."""
+    fib_tc = TraceConfig(horizon=6 * HOUR, avg_idle_nodes=11.85, full_share=0.006, seed=17)
+    var_tc = TraceConfig(horizon=6 * HOUR, avg_idle_nodes=7.38, full_share=0.0944, seed=21)
+    rf = HarvestRuntime(HarvestConfig(model="fib", duration=6 * HOUR, qps=1.0, seed=3),
+                        trace_cfg=fib_tc).run()
+    rv = HarvestRuntime(HarvestConfig(model="var", duration=6 * HOUR, qps=1.0, seed=3),
+                        trace_cfg=var_tc).run()
+    assert rf.slurm_coverage > 0.8
+    assert rv.slurm_coverage < rf.slurm_coverage
+    assert rv.slurm_coverage / rv.sim_upper_bound < rf.slurm_coverage / rf.sim_upper_bound
+
+
+def test_prime_jobs_never_delayed_beyond_grace():
+    """Non-invasiveness: after a window's actual end, any pilot invoker must be
+    gone within the grace period."""
+    cfg = HarvestConfig(duration=4 * HOUR, qps=0.0, seed=0)
+    tc = TraceConfig(horizon=4 * HOUR, seed=5)
+    rt = HarvestRuntime(cfg, trace_cfg=tc)
+    res = rt.run()
+    for inv in rt.slurm.all_invokers:
+        node_windows = [w for w in rt.windows if w.node == inv.node
+                        and w.start <= inv.t_created]
+        if not node_windows or inv.t_dead is None:
+            continue
+        w = max(node_windows, key=lambda x: x.start)
+        assert inv.t_dead <= w.end + cfg.grace + 1e-6
+
+
+# --- Alg. 1 wrapper -------------------------------------------------------------------
+def test_wrapper_fails_over_to_commercial():
+    sim = Simulator()
+    ctrl = Controller(sim)
+    commercial = CommercialBackend(sim)
+    wrap = FaaSWrapper(sim, ctrl, commercial)
+    # no invokers -> first call 503s -> commercial; next 60 s all commercial
+    r1 = Request(fn="f", exec_time=0.01, arrival=0.0)
+    assert wrap.submit(r1) == "commercial"
+    sim.run_until(1.0)
+    r2 = Request(fn="f", exec_time=0.01, arrival=sim.now)
+    assert wrap.submit(r2) == "commercial"
+    assert wrap.n_cluster == 0
+    # after the cool-off, with a healthy invoker, back to the cluster
+    rng = np.random.default_rng(0)
+    Invoker(sim, ctrl, node=0, sched_end=4000.0, rng=rng)
+    sim.run_until(100.0)
+    r3 = Request(fn="f", exec_time=0.01, arrival=sim.now)
+    assert wrap.submit(r3) == "cluster"
+    sim.run_until(200.0)
+    assert r3.outcome == "success"

@@ -1,0 +1,93 @@
+"""Dry-run machinery tests: input specs, HLO collective parsing, analytic
+FLOPs, cell skip logic, and a subprocess smoke of the real entrypoint."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES_BY_NAME, get_config
+from repro.configs.base import cell_is_runnable
+from repro.launch import roofline as RL
+from repro.launch.dryrun import input_specs
+
+
+def test_input_specs_shapes_per_family():
+    train = SHAPES_BY_NAME["train_4k"]
+    lm = input_specs(get_config("internlm2-1.8b"), train)
+    assert lm["tokens"].shape == (256, 4096) and lm["tokens"].dtype == jnp.int32
+    vlm = input_specs(get_config("internvl2-26b"), train)
+    assert vlm["vision_embeds"].shape == (256, 256, 6144)
+    assert vlm["tokens"].shape == (256, 4096 - 256)
+    audio = input_specs(get_config("hubert-xlarge"), train)
+    assert audio["frames"].shape == (256, 4096, 1280)
+    dec = input_specs(get_config("mamba2-2.7b"), SHAPES_BY_NAME["long_500k"])
+    assert dec["token"].shape == (1, 1)
+    state = dec["cache"]["ssm"]["state"]
+    assert state.shape == (64, 1, 80, 64, 128)  # (L,B,H,P,N)
+
+
+def test_swa_cache_is_window_bounded():
+    dec = input_specs(get_config("mixtral-8x22b"), SHAPES_BY_NAME["decode_32k"])
+    k = dec["cache"]["moe"]["k"]
+    assert k.shape[2] == 4096  # ring buffer of window size, not 32768
+
+
+def test_mla_cache_is_compressed():
+    dec = input_specs(get_config("deepseek-v2-lite-16b"), SHAPES_BY_NAME["decode_32k"])
+    c = dec["cache"]["moe"]["c"]
+    assert c.shape[-1] == 512 + 64  # kv_lora + rope, NOT H*dh
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ag = bf16[2048,1024]{1,0} all-gather(%x), replica_groups={}
+  %ar = f32[128]{0} all-reduce(%y), to_apply=%sum
+  %tup = (f32[64]{0}, f32[32]{0}) all-reduce(%a, %b), to_apply=%sum
+  %cp = u8[100]{0} collective-permute(%z)
+  %rs = bf16[512,16]{1,0} reduce-scatter(%w), dimensions={0}
+  %a2a = s8[4,4]{1,0} all-to-all(%v)
+  %notacoll = f32[9]{0} add(%p, %q)
+"""
+    out = RL.collective_bytes(hlo)
+    assert out["all-gather"] == 2048 * 1024 * 2
+    assert out["all-reduce"] == 128 * 4 + 64 * 4 + 32 * 4
+    assert out["collective-permute"] == 100
+    assert out["reduce-scatter"] == 512 * 16 * 2
+    assert out["all-to-all"] == 16
+    assert "add" not in out
+
+
+def test_analytic_model_flops_scales():
+    cfg = get_config("internlm2-1.8b")
+    train = RL.analytic_model_flops(cfg, SHAPES_BY_NAME["train_4k"])
+    # 6 N D dominates: N=1.89e9, D=1.05e6 -> ~1.2e16
+    assert 1e16 < train < 2e16
+    dec = RL.analytic_model_flops(cfg, SHAPES_BY_NAME["decode_32k"])
+    assert dec < train / 1000
+    # MoE counts ACTIVE params only
+    mx = get_config("mixtral-8x22b")
+    t_moe = RL.analytic_model_flops(mx, SHAPES_BY_NAME["train_4k"])
+    n_total = mx.param_count(active_only=False)
+    n_active = mx.param_count(active_only=True)
+    assert n_active < 0.45 * n_total
+    assert t_moe < 6 * n_total * 256 * 4096  # strictly below dense-equivalent
+
+
+def test_skip_matrix():
+    hub = get_config("hubert-xlarge")
+    assert not cell_is_runnable(hub, SHAPES_BY_NAME["decode_32k"])[0]
+    assert not cell_is_runnable(hub, SHAPES_BY_NAME["long_500k"])[0]
+    assert cell_is_runnable(hub, SHAPES_BY_NAME["prefill_32k"])[0]
+    for a in ("mamba2-2.7b", "zamba2-2.7b", "mixtral-8x22b"):
+        assert cell_is_runnable(get_config(a), SHAPES_BY_NAME["long_500k"])[0], a
+    for a in ("internlm2-1.8b", "deepseek-v2-lite-16b", "internvl2-26b"):
+        assert not cell_is_runnable(get_config(a), SHAPES_BY_NAME["long_500k"])[0], a
+
+
+def test_roofline_terms_math():
+    t = RL.RooflineTerms(flops_per_dev=197e12, bytes_per_dev=819e9,
+                         coll_bytes_per_dev=0.0, chips=256,
+                         model_flops=197e12 * 256 * 0.5)
+    assert abs(t.t_compute - 1.0) < 1e-9
+    assert abs(t.t_memory - 1.0) < 1e-9
+    assert t.bottleneck in ("compute", "memory")
+    assert abs(t.roofline_fraction - 0.5) < 1e-9

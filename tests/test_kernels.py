@@ -1,0 +1,139 @@
+"""Per-kernel validation: sweep shapes/dtypes and assert_allclose against the
+ref.py pure-jnp oracles (interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.ops import moe_gmm_capacity, tile_experts_for_capacity
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.ssd import ssd
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=5e-5, rtol=5e-4)
+
+
+# --- flash attention ---------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,sq,sk,d,causal,window", [
+    (2, 4, 2, 256, 256, 64, True, None),      # GQA causal
+    (1, 4, 4, 128, 128, 128, False, None),    # MHA bidirectional (hubert)
+    (1, 8, 2, 384, 384, 64, True, 128),       # sliding window (mixtral)
+    (2, 2, 1, 100, 100, 32, True, None),      # non-multiple seq (padding path)
+    (1, 16, 8, 128, 128, 128, True, None),    # internlm2-like head geometry
+    (1, 2, 2, 512, 512, 80, True, None),      # zamba2 head_dim=80
+])
+def test_flash_attention_matches_ref(b, h, kv, sq, sk, d, causal, window, dtype):
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (b, h, sq, d), dtype)
+    k = jax.random.normal(ks[1], (b, kv, sk, d), dtype)
+    v = jax.random.normal(ks[2], (b, kv, sk, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out.astype(np.float32), exp.astype(np.float32), **_tol(dtype))
+
+
+def test_flash_attention_block_shape_invariance():
+    """Same math regardless of block tiling choice."""
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (1, 4, 256, 64))
+    k = jax.random.normal(ks[1], (1, 2, 256, 64))
+    v = jax.random.normal(ks[2], (1, 2, 256, 64))
+    outs = [flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+            for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-5, rtol=1e-5)
+
+
+# --- rmsnorm -------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 64, 256), (1, 7, 512), (128, 128), (3, 100, 80)])
+def test_rmsnorm_matches_ref(shape, dtype):
+    x = jax.random.normal(RNG, shape, dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), shape[-1:], jnp.float32)
+    out = rmsnorm(x, w, interpret=True)
+    exp = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(out.astype(np.float32), exp.astype(np.float32), **_tol(dtype))
+
+
+# --- ssd -------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
+    (2, 64, 4, 16, 2, 8, 16),
+    (1, 128, 8, 64, 1, 32, 32),     # mamba2-like (headdim 64, state big)
+    (2, 96, 2, 8, 2, 16, 32),
+    (1, 256, 4, 64, 1, 64, 128),    # zamba2-like
+])
+def test_ssd_matches_ref(b, s, h, p, g, n, chunk, dtype):
+    ks = jax.random.split(RNG, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))).astype(dtype)
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, s, g, n), dtype)
+    cm = jax.random.normal(ks[4], (b, s, g, n), dtype)
+    y, fin = ssd(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+    yr, finr = ref.ssd_ref(x, dt, a, bm, cm)
+    tol = dict(atol=3e-1, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=2e-3, rtol=1e-3)
+    np.testing.assert_allclose(y, yr, **tol)
+    np.testing.assert_allclose(fin, finr, **tol)
+
+
+def test_ssd_chunk_invariance():
+    """Output must not depend on the chunk size."""
+    ks = jax.random.split(RNG, 5)
+    b, s, h, p, g, n = 1, 128, 2, 16, 1, 8
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, s, g, n))
+    cm = jax.random.normal(ks[4], (b, s, g, n))
+    outs = [ssd(x, dt, a, bm, cm, chunk=c, interpret=True)[0] for c in (16, 32, 64, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-4, rtol=1e-3)
+
+
+# --- moe gmm ----------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t,d,f,e,bt,bf", [
+    (256, 64, 96, 4, 32, 32),
+    (512, 128, 128, 8, 64, 128),
+    (128, 32, 200, 2, 64, 128),   # F padding path
+])
+def test_moe_gmm_matches_ref(t, d, f, e, bt, bf, dtype):
+    # group sizes: multiples of bt summing to t (kernel contract)
+    base = t // bt
+    sizes = [bt] * e
+    rem = base - e
+    sizes[0] += rem * bt // 2 * 0  # keep simple: distribute remainder below
+    per = [1] * e
+    for i in range(rem):
+        per[i % e] += 1
+    gs = jnp.array([p * bt for p in per], jnp.int32)
+    assert int(gs.sum()) == t
+    lhs = jax.random.normal(RNG, (t, d), dtype)
+    rhs = jax.random.normal(jax.random.PRNGKey(2), (e, d, f), dtype)
+    te = jnp.repeat(jnp.arange(e, dtype=jnp.int32), gs // bt, total_repeat_length=t // bt)
+    out = moe_gmm(lhs, rhs, te, block_t=bt, block_f=bf, interpret=True)
+    exp = ref.moe_gmm_ref(lhs, rhs, gs)
+    np.testing.assert_allclose(out.astype(np.float32), exp.astype(np.float32), **_tol(dtype))
+
+
+def test_moe_gmm_capacity_buffer():
+    """(E,C,D) capacity-buffer wrapper: every expert multiplies its own slab."""
+    e, c, d, f = 4, 64, 32, 48
+    buf = jax.random.normal(RNG, (e, c, d))
+    rhs = jax.random.normal(jax.random.PRNGKey(3), (e, d, f))
+    out = moe_gmm_capacity(buf, rhs, block_t=32, block_f=16, interpret=True)
+    exp = jnp.einsum("ecd,edf->ecf", buf, rhs)
+    np.testing.assert_allclose(out, exp, atol=1e-5, rtol=1e-5)
+
+
+def test_tile_experts_map():
+    te = tile_experts_for_capacity(3, 128, 64)
+    np.testing.assert_array_equal(te, jnp.array([0, 0, 1, 1, 2, 2], jnp.int32))

@@ -1,0 +1,97 @@
+"""Hypothesis property-based tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Controller, Invoker, Request, Simulator
+from repro.core.coverage import greedy_fill
+from repro.core.events import Simulator as Sim
+from repro.core.queues import Topic
+
+MIN = 60.0
+
+
+# --- greedy packing invariants -----------------------------------------------------
+@given(length=st.floats(min_value=0, max_value=7200),
+       lengths=st.lists(st.integers(min_value=1, max_value=120), min_size=1,
+                        max_size=12, unique=True))
+@settings(max_examples=200, deadline=None)
+def test_greedy_fill_never_overfills(length, lengths):
+    jobs = greedy_fill(length, [m * MIN for m in lengths])
+    assert sum(jobs) <= length + 1e-6
+    # leftover is smaller than the shortest job
+    assert length - sum(jobs) < min(lengths) * MIN
+
+
+@given(length=st.floats(min_value=120, max_value=7200))
+@settings(max_examples=100, deadline=None)
+def test_greedy_fill_c2_leaves_less_than_one_slot(length):
+    """With the 2..120-min set, waste per window is < one 2-min slot."""
+    jobs = greedy_fill(length, [m * MIN for m in range(2, 121, 2)])
+    assert length - sum(jobs) < 2 * MIN
+
+
+# --- event engine ordering -----------------------------------------------------------
+@given(times=st.lists(st.floats(min_value=0, max_value=1e6), min_size=1, max_size=50))
+@settings(max_examples=100, deadline=None)
+def test_simulator_processes_in_time_order(times):
+    sim = Sim()
+    seen = []
+    for t in times:
+        sim.at(t, lambda tt=t: seen.append(tt))
+    sim.run_until(1e7)
+    assert seen == sorted(times)
+    assert len(seen) == len(times)
+
+
+@given(st.data())
+@settings(max_examples=50, deadline=None)
+def test_simulator_cancellation(data):
+    sim = Sim()
+    fired = []
+    evs = [sim.at(float(i), lambda i=i: fired.append(i)) for i in range(10)]
+    cancel = data.draw(st.sets(st.integers(min_value=0, max_value=9)))
+    for i in cancel:
+        evs[i].cancel()
+    sim.run_until(100)
+    assert set(fired) == set(range(10)) - cancel
+
+
+# --- topic conservation -----------------------------------------------------------------
+@given(n=st.integers(min_value=0, max_value=100))
+@settings(max_examples=50, deadline=None)
+def test_topic_drain_conserves_messages(n):
+    a, b = Topic("a"), Topic("b")
+    reqs = [Request(fn=f"f{i}", exec_time=0.01, arrival=0.0) for i in range(n)]
+    for r in reqs:
+        a.push(r)
+    moved = a.drain_into(b)
+    assert moved == n and len(a) == 0 and len(b) == n
+    # FIFO order preserved
+    out = [b.pop() for _ in range(n)]
+    assert [r.id for r in out] == [r.id for r in reqs]
+
+
+# --- request conservation through eviction storms -----------------------------------------
+@given(n_reqs=st.integers(min_value=1, max_value=60),
+       evict_at=st.floats(min_value=30.0, max_value=120.0),
+       seed=st.integers(min_value=0, max_value=2**16))
+@settings(max_examples=25, deadline=None)
+def test_no_request_lost_under_eviction(n_reqs, evict_at, seed):
+    """Whatever the eviction timing, every accepted request terminates in a
+    definite state and interruptible work is never silently dropped."""
+    sim = Simulator()
+    ctrl = Controller(sim)
+    rng = np.random.default_rng(seed)
+    inv1 = Invoker(sim, ctrl, node=0, sched_end=4000.0, rng=rng)
+    inv2 = Invoker(sim, ctrl, node=1, sched_end=4000.0, rng=rng)
+    sim.run_until(29.9)
+    reqs = [Request(fn=f"f{i}", exec_time=1.0, arrival=sim.now, timeout=3600.0)
+            for i in range(n_reqs)]
+    accepted = [r for r in reqs if ctrl.submit(r)]
+    sim.at(evict_at, inv1.sigterm, "evict")
+    sim.at(evict_at + 180.0, inv1.sigkill)
+    sim.run_until(3900.0)
+    for r in accepted:
+        assert r.outcome in ("success", "timeout", "failed"), r
+    # interruptible requests on a surviving invoker must all succeed
+    assert all(r.outcome == "success" for r in accepted if r.interruptible)
