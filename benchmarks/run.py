@@ -53,6 +53,7 @@ def main() -> None:
     args = ap.parse_args()
 
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from benchmarks import multi_tenant as MT
     from benchmarks import paper_benches as PB
 
     day = 24 * HOUR if args.full else 6 * HOUR
@@ -64,6 +65,8 @@ def main() -> None:
         "table3": lambda: PB.bench_table3_var(day),
         "fig5": lambda: PB.bench_fig5_responsiveness(resp),
         "fig7": lambda: PB.bench_fig7_single_invocation(200 if args.full else 50),
+        "multitenant": lambda: MT.bench_multi_tenant(6 * HOUR if args.full
+                                                     else 2 * HOUR),
         "roofline": bench_roofline_summary,
     }
     if args.only:

@@ -19,6 +19,7 @@ accepts.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 from typing import Callable, Dict, List, Optional, Sequence
@@ -81,6 +82,10 @@ class SlurmSim:
         self.pilot_time = 0.0
         self.n_started = 0
         self.n_evicted = 0
+        # rolling view of recently *closed* windows — the demand-adaptive
+        # supply manager reads this to match its length mix to the cluster
+        self.recent_window_lengths: collections.deque = collections.deque(maxlen=64)
+        self._last_expedite = -1e9
         self._horizon = max((w.end for w in windows), default=0.0)
         for w in windows:
             self.sim.at(w.start, self._window_open, w)
@@ -102,6 +107,7 @@ class SlurmSim:
             self.n_evicted += 1
             inv.sigterm("evict")
             self.sim.after(self.grace, self._force_kill, inv)
+        self.recent_window_lengths.append(w.length)
         st.window = None
 
     def _force_kill(self, inv: Invoker):
@@ -110,15 +116,18 @@ class SlurmSim:
 
     # --- scheduling pass ----------------------------------------------------------
     def _sched_pass(self):
-        now = self.sim.now
+        self._do_pass()
+        if self.sim.now < self._horizon + 3600:
+            self.sim.after(self.sched_interval, self._sched_pass)
+
+    def _do_pass(self):
         placed = 0
         for node, st in self.nodes.items():
             if self.pass_budget is not None and placed >= self.pass_budget:
                 break
             if self._try_place(node, st):
                 placed += 1
-        if now < self._horizon + 3600:
-            self.sim.after(self.sched_interval, self._sched_pass)
+        return placed
 
     def _try_place(self, node: int, st: "_NodeState") -> bool:
         if st.window is None or st.invoker is not None:
@@ -176,6 +185,7 @@ class SlurmSim:
         st.job = job
         inv._slurm_node = node          # backref for exit handling
         inv._slurm_start = self.sim.now
+        inv._slurm_window = st.window   # the window this invoker was placed in
         self.all_invokers.append(inv)
         self.n_started += 1
         if self.on_job_started:
@@ -189,8 +199,11 @@ class SlurmSim:
             if st.job is not None:
                 st.job.state = "done"
                 st.job = None
-        # coverage accounting: clip pilot time at actual window end
-        w_end = st.window.end if (st and st.window) else inv.sched_end
+        # coverage accounting: clip pilot time at the actual end of the window
+        # the invoker was PLACED in — st.window may already belong to a newer
+        # window that opened on the node before this invoker finished exiting.
+        w = getattr(inv, "_slurm_window", None)
+        w_end = w.end if w is not None else inv.sched_end
         end_counted = min(self.sim.now, w_end)
         self.pilot_time += max(0.0, end_counted - inv._slurm_start)
         # backfill plans chain fixed-length jobs back-to-back on the node
@@ -198,8 +211,24 @@ class SlurmSim:
             self._try_place(node, st)
 
     # --- metrics ------------------------------------------------------------------
-    def submit_jobs(self, jobs: Sequence[PilotJob]):
+    def submit_jobs(self, jobs: Sequence[PilotJob], expedite: bool = False):
+        """Queue pilot jobs. With ``expedite``, run a quick scheduling pass
+        right away (Slurm triggers its quick scheduler on job submission;
+        rate-limited to once per second like sched_min_interval)."""
         self.queue.extend(jobs)
+        if expedite and self.sim.now - self._last_expedite >= 1.0:
+            self._last_expedite = self.sim.now
+            self.sim.after(0.0, self._do_pass)
+
+    def cancel_queued(self, jobs: Sequence[PilotJob]) -> int:
+        """scancel still-queued pilot jobs (supply scale-down)."""
+        n = 0
+        for j in jobs:
+            if j in self.queue:
+                self.queue.remove(j)
+                j.state = "cancelled"
+                n += 1
+        return n
 
     def queued_counts(self) -> Dict[Optional[float], int]:
         out: Dict[Optional[float], int] = {}
@@ -212,7 +241,8 @@ class SlurmSim:
         live = 0.0
         for st in self.nodes.values():
             if st.invoker is not None and st.invoker.state != "dead":
-                w_end = st.window.end if st.window else self.sim.now
+                w = getattr(st.invoker, "_slurm_window", None)
+                w_end = w.end if w is not None else self.sim.now
                 end_counted = min(self.sim.now, w_end)
                 live += max(0.0, end_counted - st.invoker._slurm_start)
         return (self.pilot_time + live) / max(self.idle_time_total, 1e-9)

@@ -27,13 +27,18 @@ class Controller:
     (state transitions here), and (3) the fast-lane hand-off on SIGTERM.
     """
 
-    def __init__(self, sim: Simulator, queue_depth_soft_limit: int = 64):
+    def __init__(self, sim: Simulator, queue_depth_soft_limit: int = 64,
+                 admission=None, metrics=None):
         self.sim = sim
         self.fast_lane = Topic("fast-lane")
         self.topics: Dict[int, Topic] = {}
         self.invokers: Dict[int, "Invoker"] = {}
         self._healthy_order: List[int] = []   # sorted ids of healthy invokers
         self.queue_depth_soft_limit = queue_depth_soft_limit
+        # optional platform-layer plugins (repro.faas): SLO-aware admission
+        # control in front of routing, and a metrics registry to publish into
+        self.admission = admission
+        self.metrics = metrics
         self.completed: List[Request] = []
         self.rejected_503: List[Request] = []
         self.n_submitted = 0
@@ -55,8 +60,6 @@ class Controller:
         topic = self.topics.get(inv.id)
         if topic:
             moved = topic.drain_into(self.fast_lane)
-            for _ in range(moved):
-                pass
         self._kick_all()
         return moved
 
@@ -71,12 +74,21 @@ class Controller:
 
     # --- request path --------------------------------------------------------
     def submit(self, req: Request) -> bool:
-        """Route a request. Returns False (503) when no invoker is healthy."""
+        """Route a request. Returns False (503) when no invoker is healthy or
+        admission control rejects it."""
         self.n_submitted += 1
+        if self.metrics is not None:
+            self.metrics.counter("requests_total",
+                                 slo_class=req.slo_class).inc()
+        # capacity check first: an outage must not drain admission buckets
+        # (and must report as no_invoker, not throttled — the adaptive
+        # supply manager keys its pressure signal on that distinction)
         if not self._healthy_order:
-            req.outcome = "503"
-            self.rejected_503.append(req)
-            return False
+            return self._reject(req, "no_invoker")
+        if self.admission is not None:
+            ok, reason = self.admission.check(req, self.sim.now)
+            if not ok:
+                return self._reject(req, reason)
         req.t_invoked = self.sim.now
         # hash routing with overload stepping (OpenWhisk-style)
         n = len(self._healthy_order)
@@ -94,6 +106,14 @@ class Controller:
         self.invokers[chosen].kick()
         return True
 
+    def _reject(self, req: Request, reason: str) -> bool:
+        req.outcome = "503"
+        req.reject_reason = reason
+        self.rejected_503.append(req)
+        if self.metrics is not None:
+            self.metrics.counter("rejected_503_total", reason=reason).inc()
+        return False
+
     def requeue_fast(self, req: Request):
         """SIGTERM hand-off path for pulled-but-unfinished requests."""
         req.via_fast_lane = True
@@ -106,11 +126,24 @@ class Controller:
             req.outcome = outcome
             req.t_completed = self.sim.now
             self.completed.append(req)
+            self._on_terminal(req)
 
     def _check_timeout(self, req: Request):
         if req.outcome is None:
             req.outcome = "timeout"
             self.completed.append(req)
+            self._on_terminal(req)
+
+    def _on_terminal(self, req: Request):
+        if self.admission is not None:
+            self.admission.release(req)
+        if self.metrics is not None:
+            self.metrics.counter("outcomes_total", outcome=req.outcome,
+                                 slo_class=req.slo_class).inc()
+            if req.outcome == "success":
+                self.metrics.histogram("response_time_s",
+                                       slo_class=req.slo_class).observe(
+                    req.response_time)
 
     def _kick_all(self):
         for i in self._healthy_order:

@@ -18,10 +18,13 @@ class Request:
     arrival: float
     timeout: float = 60.0
     interruptible: bool = True
+    tenant: str = "default"
+    slo_class: str = "best_effort"  # key into the SLO policy table
     id: int = dataclasses.field(default_factory=lambda: next(_REQ_IDS))
     attempts: int = 0
     via_fast_lane: bool = False
     outcome: Optional[str] = None   # success | timeout | failed | 503 | lost
+    reject_reason: str = ""         # on 503: no_invoker | throttled:* | ...
     t_invoked: Optional[float] = None
     t_completed: Optional[float] = None
 

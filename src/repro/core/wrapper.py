@@ -59,7 +59,8 @@ class FaaSWrapper:
         self.last_503 = self.sim.now
         self.n_commercial += 1
         retry = Request(fn=req.fn, exec_time=req.exec_time, arrival=req.arrival,
-                        timeout=req.timeout, interruptible=req.interruptible)
+                        timeout=req.timeout, interruptible=req.interruptible,
+                        tenant=req.tenant, slo_class=req.slo_class)
         retry.attempts = req.attempts + 1
         self.commercial.execute(retry)
         return "commercial"

@@ -130,7 +130,8 @@ def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
 def batch_spec(global_batch: int, mesh: Mesh, extra_dims: int = 1) -> P:
     axes = batch_axes(mesh)
     n = int(np.prod([_axis(mesh, a) for a in axes]))
-    lead = axes if (n > 0 and global_batch % n == 0) else None
+    # no shardable batch axes (e.g. 1x1 mesh) must yield None, not P(())
+    lead = axes if (axes and global_batch % n == 0) else None
     return P(lead, *([None] * extra_dims))
 
 

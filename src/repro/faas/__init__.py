@@ -1,0 +1,18 @@
+"""Multi-tenant FaaS platform layer on top of the paper's harvest core:
+heterogeneous workload suites, per-tenant SLO classes with token-bucket
+admission control, a demand-adaptive pilot-job supply manager, and a
+Prometheus-style metrics registry sampled on the sim clock."""
+from repro.faas.admission import AdmissionController, TokenBucket
+from repro.faas.autoscaler import AdaptiveJobManager
+from repro.faas.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                                TimeSampler)
+from repro.faas.slo import ClassReport, SLOClass, default_slos, per_class_report
+from repro.faas.workloads import (FunctionClass, WorkloadSuite, burst_suite,
+                                  default_suite)
+
+__all__ = [
+    "AdmissionController", "TokenBucket", "AdaptiveJobManager",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "TimeSampler",
+    "ClassReport", "SLOClass", "default_slos", "per_class_report",
+    "FunctionClass", "WorkloadSuite", "burst_suite", "default_suite",
+]

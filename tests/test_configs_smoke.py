@@ -10,6 +10,8 @@ from repro.configs import ARCH_IDS, SHAPES, all_cells, get_config
 from repro.models import forward, init_params, loss_fn
 from repro.models.frontends import make_batch
 
+pytestmark = pytest.mark.slow  # JAX tier: excluded from the fast core-sim run
+
 B, S = 2, 64
 
 

@@ -9,6 +9,8 @@ from repro.configs.base import cell_is_runnable
 from repro.launch import roofline as RL
 from repro.launch.dryrun import input_specs
 
+pytestmark = pytest.mark.slow  # JAX tier: excluded from the fast core-sim run
+
 
 def test_input_specs_shapes_per_family():
     train = SHAPES_BY_NAME["train_4k"]

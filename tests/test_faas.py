@@ -1,0 +1,208 @@
+"""Tests for the multi-tenant platform layer (repro.faas): token-bucket
+admission, workload arrival generators, metrics registry, and the
+demand-adaptive pilot supply end-to-end against the static fib baseline."""
+import numpy as np
+import pytest
+
+from repro.core import Controller, HarvestConfig, HarvestRuntime, Request, \
+    Simulator, TraceConfig
+from repro.faas import (AdmissionController, MetricsRegistry, TimeSampler,
+                        TokenBucket, burst_suite, default_slos, default_suite)
+from repro.faas.workloads import FunctionClass
+
+HOUR = 3600.0
+
+
+# --- token bucket / admission ---------------------------------------------------
+def test_token_bucket_rate_and_burst():
+    tb = TokenBucket(rate=2.0, burst=4.0)
+    # burst capacity drains first
+    assert sum(tb.try_take(0.0) for _ in range(6)) == 4
+    # refills at 2 tokens/s
+    assert tb.try_take(1.0)
+    assert tb.try_take(1.0)
+    assert not tb.try_take(1.0)
+    # long idle caps at burst, not beyond
+    assert sum(tb.try_take(100.0) for _ in range(6)) == 4
+
+
+def test_admission_throttles_per_tenant_not_per_class():
+    adm = AdmissionController(default_slos())
+    loud = [Request(fn=f"a{i}", exec_time=0.01, arrival=0.0, tenant="loud",
+                    slo_class="best_effort") for i in range(200)]
+    n_loud = sum(adm.check(r, 0.0)[0] for r in loud)
+    assert n_loud < 50  # the burst blew the loud tenant's bucket
+    # a well-behaved tenant in the SAME class is unaffected
+    quiet = Request(fn="q", exec_time=0.01, arrival=0.0, tenant="quiet",
+                    slo_class="best_effort")
+    assert adm.check(quiet, 0.0)[0]
+
+
+def test_admission_fn_concurrency_cap_released_on_completion():
+    slos = default_slos()
+    cap = slos["latency"].max_fn_concurrency
+    adm = AdmissionController(slos)
+    reqs = [Request(fn="hot", exec_time=0.01, arrival=0.0,
+                    slo_class="latency") for _ in range(cap + 5)]
+    decisions = [adm.check(r, float(i)) for i, r in enumerate(reqs)]
+    admitted = [r for r, (ok, _) in zip(reqs, decisions) if ok]
+    assert len(admitted) == cap
+    assert decisions[cap][1] == "fn_concurrency"
+    adm.release(admitted[0])
+    assert adm.inflight("hot") == cap - 1
+    late = Request(fn="hot", exec_time=0.01, arrival=0.0, slo_class="latency")
+    assert adm.check(late, float(len(reqs)))[0]
+    # double release is a no-op (conservation)
+    adm.release(admitted[0])
+    assert adm.inflight("hot") == cap
+
+
+def test_controller_releases_admission_on_timeout_and_completion():
+    sim = Simulator()
+    adm = AdmissionController(default_slos())
+    ctrl = Controller(sim, admission=adm)
+    from repro.core import Invoker
+    rng = np.random.default_rng(0)
+    Invoker(sim, ctrl, node=0, sched_end=4000.0, rng=rng)
+    sim.run_until(40.0)
+    reqs = [Request(fn="f", exec_time=0.5, arrival=sim.now, timeout=30.0,
+                    slo_class="latency") for _ in range(4)]
+    for r in reqs:
+        ctrl.submit(r)
+    sim.run_until(600.0)
+    assert all(r.outcome in ("success", "timeout") for r in reqs)
+    assert adm.inflight("f") == 0
+    assert adm.inflight_total() == 0
+
+
+# --- workload generators ------------------------------------------------------------
+@pytest.mark.parametrize("arrival", ["constant", "poisson", "diurnal"])
+def test_arrival_rate_matches_spec(arrival):
+    cls = FunctionClass(name="x", rate=5.0, arrival=arrival)
+    rng = np.random.default_rng(0)
+    # diurnal only averages to the base rate over whole periods
+    dur = cls.diurnal_period if arrival == "diurnal" else 4 * HOUR
+    times = cls.arrival_times(rng, dur)
+    assert np.all((0 <= times) & (times < dur))
+    assert np.all(np.diff(times) >= 0)
+    assert abs(len(times) / dur - 5.0) < 5.0 * 0.1
+
+
+def test_onoff_is_burstier_than_poisson():
+    rng = np.random.default_rng(1)
+    dur = 8 * HOUR
+    onoff = FunctionClass(name="b", rate=3.0, arrival="onoff",
+                          on_s=45.0, off_s=300.0, on_factor=25.0)
+    pois = FunctionClass(name="p", rate=3.0, arrival="poisson")
+    t_b = onoff.arrival_times(rng, dur)
+    t_p = pois.arrival_times(np.random.default_rng(1), dur)
+    # index of dispersion of 10 s bucket counts: ~1 for Poisson, >> 1 for on/off
+    def dispersion(ts):
+        counts, _ = np.histogram(ts, bins=int(dur / 10.0))
+        return np.var(counts) / max(np.mean(counts), 1e-9)
+    assert dispersion(t_p) < 2.0
+    assert dispersion(t_b) > 4.0 * dispersion(t_p)
+
+
+def test_batch_arrivals_form_spikes():
+    cls = FunctionClass(name="n", rate=1.0, arrival="batch",
+                        batch_every=600.0, batch_size=50)
+    times = cls.arrival_times(np.random.default_rng(0), 2 * HOUR)
+    assert len(times) == 11 * 50
+    # every spike lands within one second
+    for k in range(1, 12):
+        spike = times[(times >= k * 600.0) & (times < k * 600.0 + 1.0)]
+        assert len(spike) == 50
+
+
+def test_exec_distributions_have_requested_mean():
+    rng = np.random.default_rng(0)
+    for dist in ("constant", "lognormal", "bimodal", "pareto"):
+        cls = FunctionClass(name="d", exec_dist=dist, exec_mean=0.1)
+        xs = np.array([cls.sample_exec(rng) for _ in range(20000)])
+        assert np.all(xs > 0)
+        if dist == "bimodal":
+            mean = 0.1 * (0.9 + 0.1 * 50.0)  # heavy_share * heavy_factor
+        else:
+            mean = 0.1
+        assert abs(np.mean(xs) / mean - 1.0) < 0.25, dist
+
+
+# --- metrics ---------------------------------------------------------------------------
+def test_metrics_registry_counters_and_histograms():
+    m = MetricsRegistry()
+    m.counter("reqs", slo_class="latency").inc()
+    m.counter("reqs", slo_class="latency").inc(2)
+    m.counter("reqs", slo_class="batch").inc()
+    assert m.total("reqs") == 4
+    h = m.histogram("rt")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    assert h.count == 4 and h.quantile(0.5) == 2.5
+    scrape = m.collect()
+    assert scrape["reqs{slo_class=latency}"] == 3
+    assert scrape["rt_count"] == 4
+
+
+def test_time_sampler_scrapes_on_grid():
+    sim = Simulator()
+    m = MetricsRegistry()
+    g = m.gauge("depth", fn=lambda: sim.now)   # callback gauge
+    sampler = TimeSampler(sim, interval=10.0, horizon=100.0)
+    sampler.track("depth", g)
+    sim.run_until(200.0)
+    s = sampler.series("depth")
+    assert len(s) == 11 and s[0] == 0.0 and s[-1] == 100.0
+
+
+# --- end-to-end: adaptive vs static supply ----------------------------------------------
+def _run(scaler, suite, duration=HOUR, admission=True, seed=3):
+    tc = TraceConfig(horizon=duration, avg_idle_nodes=11.85, full_share=0.006,
+                     seed=17)
+    cfg = HarvestConfig(model="fib", duration=duration, qps=0.0, seed=seed,
+                        scaler=scaler)
+    return HarvestRuntime(cfg, trace_cfg=tc, suite=suite,
+                          admission=admission).run()
+
+
+def test_multi_tenant_runtime_reports_per_class():
+    res = _run("static", default_suite(), duration=HOUR)
+    classes = {cr.slo_class for cr in res.per_class}
+    assert {"latency", "best_effort", "batch"} <= classes
+    lat = next(cr for cr in res.per_class if cr.slo_class == "latency")
+    assert lat.n_submitted > 1000 and lat.n_success > 0
+    # conservation: every request terminated
+    assert all(r.outcome is not None for r in res.requests)
+    # metrics registry agrees with the request log
+    assert res.metrics.total("requests_total") == res.n_submitted
+
+
+def test_adaptive_supply_beats_static_under_burst():
+    """Acceptance: coverage within 5 pp of the static fib manager while
+    shedding strictly fewer no-worker 503s on the bursty mix."""
+    suite = burst_suite()
+    rs = _run("static", suite, duration=2 * HOUR)
+    ra = _run("adaptive", suite, duration=2 * HOUR)
+
+    def no_worker_503(res):
+        return sum(1 for r in res.requests
+                   if r.outcome == "503" and r.reject_reason == "no_invoker")
+
+    assert ra.slurm_coverage > rs.slurm_coverage - 0.05
+    assert no_worker_503(ra) < no_worker_503(rs)
+    assert ra.outcome_counts.get("503", 0) <= rs.outcome_counts.get("503", 0)
+
+
+def test_adaptive_supply_recovers_coverage_on_default_trace():
+    """On the paper's default trace (no day-matched tuning) the adaptive
+    manager must stay within ~5 pp of static fib coverage."""
+    duration = 2 * HOUR
+    tc = TraceConfig(horizon=duration, seed=0)
+    suite = default_suite()
+    out = {}
+    for scaler in ("static", "adaptive"):
+        cfg = HarvestConfig(model="fib", duration=duration, qps=0.0,
+                            seed=3, scaler=scaler)
+        out[scaler] = HarvestRuntime(cfg, trace_cfg=tc, suite=suite,
+                                     admission=True).run()
+    assert out["adaptive"].slurm_coverage > out["static"].slurm_coverage - 0.05

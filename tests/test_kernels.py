@@ -12,6 +12,8 @@ from repro.kernels.ops import moe_gmm_capacity, tile_experts_for_capacity
 from repro.kernels.rmsnorm import rmsnorm
 from repro.kernels.ssd import ssd
 
+pytestmark = pytest.mark.slow  # JAX tier: excluded from the fast core-sim run
+
 RNG = jax.random.PRNGKey(0)
 
 

@@ -14,6 +14,8 @@ from repro.models import moe as M
 from repro.models import ssm as SSM
 from repro.models.frontends import make_batch
 
+pytestmark = pytest.mark.slow  # JAX tier: excluded from the fast core-sim run
+
 S, EXTRA, B = 64, 4, 2
 
 

@@ -21,6 +21,8 @@ from repro.training.optimizer import (OptimizerConfig, adamw_update,
                                       init_opt_state, schedule)
 from repro.training.train_step import make_train_step
 
+pytestmark = pytest.mark.slow  # JAX tier: excluded from the fast core-sim run
+
 
 # --- optimizer -----------------------------------------------------------------
 def test_adamw_reduces_quadratic_loss():

@@ -16,6 +16,8 @@ from repro.launch.train import TrainConfig, train
 from repro.models import init_params
 from repro.serving.engine import ServingEngine, make_faas_executor
 
+pytestmark = pytest.mark.slow  # JAX tier: excluded from the fast core-sim run
+
 HOUR = 3600.0
 
 
