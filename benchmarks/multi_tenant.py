@@ -14,21 +14,18 @@ from __future__ import annotations
 import time
 from typing import Dict, List, Tuple
 
-from repro.core import HarvestConfig, HarvestRuntime, TraceConfig
-from repro.faas import WorkloadSuite, burst_suite, default_suite
+from repro.platform import Platform, ScenarioConfig
 
 HOUR = 3600.0
 Row = Tuple[str, float, str]
 
 
-def run_cell(scaler: str, suite: WorkloadSuite, duration: float,
+def run_cell(scaler: str, suite: str, duration: float,
              seed: int = 3) -> Dict:
-    tc = TraceConfig(horizon=duration, avg_idle_nodes=11.85, full_share=0.006,
-                     seed=17)
-    cfg = HarvestConfig(model="fib", duration=duration, qps=0.0, seed=seed,
-                        scaler=scaler)
+    sc = ScenarioConfig.multi_tenant(duration, suite=suite, scaler=scaler,
+                                     seed=seed)
     t0 = time.perf_counter()
-    res = HarvestRuntime(cfg, trace_cfg=tc, suite=suite, admission=True).run()
+    res = Platform.build(sc).run()
     wall = time.perf_counter() - t0
     n_no_worker = sum(1 for r in res.requests
                       if r.outcome == "503" and r.reject_reason == "no_invoker")
@@ -52,8 +49,7 @@ def run_cell(scaler: str, suite: WorkloadSuite, duration: float,
 def bench_multi_tenant(duration: float = 2 * HOUR) -> Tuple[List[Row], Dict]:
     rows: List[Row] = []
     detail: Dict[str, Dict] = {}
-    for scenario, suite in (("steady", default_suite()),
-                            ("burst", burst_suite())):
+    for scenario, suite in (("steady", "default"), ("burst", "burst")):
         for scaler in ("static", "adaptive"):
             cell = run_cell(scaler, suite, duration)
             detail[f"{scenario}_{scaler}"] = cell

@@ -19,8 +19,8 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from benchmarks.faas_functions import FUNCTIONS, make_graph
-from repro.core import (HarvestConfig, HarvestRuntime, TraceConfig,
-                        generate_trace, table1, trace_stats)
+from repro.core import TraceConfig, generate_trace, table1, trace_stats
+from repro.platform import Platform, ScenarioConfig, nan_to_none as opt
 
 HOUR = 3600.0
 Row = Tuple[str, float, str]
@@ -54,19 +54,17 @@ def bench_table1(seed: int = 0) -> Tuple[List[Row], Dict]:
     return rows, {"table1": detail}
 
 
-def _run_day(model: str, tc: TraceConfig, duration: float,
-             qps: float = 10.0) -> Tuple[Row, Dict]:
-    cfg = HarvestConfig(model=model, duration=duration, qps=qps, seed=3,
-                        non_interruptible_share=0.2)
+def _run_day(scenario: ScenarioConfig) -> Tuple[Row, Dict]:
+    model = scenario.scheduling.model
     t0 = time.perf_counter()
-    res = HarvestRuntime(cfg, trace_cfg=tc).run()
+    res = Platform.build(scenario).run()
     wall = time.perf_counter() - t0
     us = wall * 1e6 / max(res.n_submitted, 1)
     detail = {
         "coverage": res.slurm_coverage,
         "sim_upper_bound": res.sim_upper_bound,
         "invoked_share": res.invoked_share,
-        "success_share": res.success_share,
+        "success_share": opt(res.success_share),
         "healthy_avg": float(np.mean(res.worker_samples["healthy"])),
         "healthy_p25_50_75": [float(np.percentile(res.worker_samples["healthy"], p))
                               for p in (25, 50, 75)],
@@ -74,7 +72,7 @@ def _run_day(model: str, tc: TraceConfig, duration: float,
         "jobs_started": res.n_jobs_started,
         "evicted": res.n_evicted,
         "no_worker_share": res.no_worker_time_share,
-        "response_p50_s": res.response_p50,
+        "response_p50_s": opt(res.response_p50),
         "outcomes": res.outcome_counts,
     }
     row = (f"table{'2' if model == 'fib' else '3'}_{model}", us,
@@ -85,17 +83,13 @@ def _run_day(model: str, tc: TraceConfig, duration: float,
 
 def bench_table2_fib(duration: float = 6 * HOUR) -> Tuple[List[Row], Dict]:
     # day-matched trace: Mar 17 (fib): avg 11.85 idle nodes, 0.6% zero
-    tc = TraceConfig(horizon=duration, avg_idle_nodes=11.85, full_share=0.006,
-                     seed=17)
-    row, detail = _run_day("fib", tc, duration)
+    row, detail = _run_day(ScenarioConfig.fib_day(duration))
     return [row], {"table2_fib": detail}
 
 
 def bench_table3_var(duration: float = 6 * HOUR) -> Tuple[List[Row], Dict]:
     # day-matched trace: Mar 21 (var): avg 7.38 workers, 9.44% zero states
-    tc = TraceConfig(horizon=duration, avg_idle_nodes=7.38, full_share=0.0944,
-                     seed=21)
-    row, detail = _run_day("var", tc, duration)
+    row, detail = _run_day(ScenarioConfig.var_day(duration))
     return [row], {"table3_var": detail}
 
 
@@ -103,35 +97,31 @@ def bench_fig5_responsiveness(duration: float = 2 * HOUR) -> Tuple[List[Row], Di
     """10 QPS against the fib day, with a mixed workload (2% long calls) that
     reproduces the paper's timeout/failure mechanisms (container saturation,
     SIGKILL on non-interruptible calls)."""
-    tc = TraceConfig(horizon=duration, avg_idle_nodes=11.85, full_share=0.006,
-                     seed=17)
-    cfg = HarvestConfig(model="fib", duration=duration, qps=10.0, seed=5,
-                        non_interruptible_share=0.2)
-    rt = HarvestRuntime(cfg, trace_cfg=tc)
+    p = Platform.build(ScenarioConfig.fib_day(duration, qps=10.0, seed=5))
     # salt in long-running calls (30-240 s) that saturate invoker containers —
     # the paper's 14:30-17:00 episode where invokers hit their concurrent-
     # container limit and invocations started timing out / failing
     rng = np.random.default_rng(9)
     for i, req_t in enumerate(np.arange(30.0, duration, 6.0)):
-        rt.sim.at(float(req_t), rt._submit, f"long-{i % 23}",
-                  float(rng.uniform(30.0, 240.0)), 300.0)
+        p.sim.at(float(req_t), p.submit, f"long-{i % 23}",
+                 float(rng.uniform(30.0, 240.0)), 300.0)
 
     t0 = time.perf_counter()
-    res = rt.run()
+    res = p.run()
     wall = time.perf_counter() - t0
     invoked = res.invoked_share
     us = wall * 1e6 / max(res.n_submitted, 1)
     detail = {
         "invoked_share": invoked,
-        "success_share": res.success_share,
+        "success_share": opt(res.success_share),
         "outcomes": res.outcome_counts,
-        "response_p50_s": res.response_p50,
-        "response_p95_s": res.response_p95,
-        "gatling_p50_s": res.response_p50 + 0.75,  # client-side overhead model
+        "response_p50_s": opt(res.response_p50),
+        "response_p95_s": opt(res.response_p95),
+        "gatling_p50_s": opt(res.response_p50 + 0.75),  # client overhead model
     }
     rows = [("fig5_responsiveness", us,
              f"invoked={invoked:.4f};success={res.success_share:.4f};"
-             f"p50_gatling_s={detail['gatling_p50_s']:.3f}")]
+             f"p50_gatling_s={res.response_p50 + 0.75:.3f}")]
     return rows, {"fig5": detail}
 
 

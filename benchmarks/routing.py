@@ -1,0 +1,99 @@
+"""Router comparison across the two placement regimes, with only the
+controller's Router seam swapped per cell (same trace, workload, admission,
+and static fib supply within each scenario):
+
+  - ``microburst`` — the multi-tenant burst suite: tiny calls, cold starts
+    dominate service time, so sticky placement (hash's stable homes,
+    locality's affinity) wins and naive least-loaded spreading hurts.
+  - ``serving`` — a few heavy model endpoints on accelerator-bound invokers
+    (concurrency 2): execution time dominates, hash strands capacity on a
+    handful of home invokers while head-of-line blocking builds, and
+    least-loaded/locality cut p95 and shed fewer admission 503s.
+
+Reported per cell: end-to-end p50/p95 response latency, 503 count and rate,
+timeouts, and cold-start pressure (mean executions per warm container);
+``*_vs_hash`` rows give the deltas that justify the seam.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+from repro.platform import Platform, ScenarioConfig, available, nan_to_none
+
+HOUR = 3600.0
+Row = Tuple[str, float, str]
+
+ROUTERS = ("hash", "least-loaded", "locality")
+SCENARIOS = {
+    "microburst": ScenarioConfig.multi_tenant_burst,
+    "serving": ScenarioConfig.serving_burst,
+}
+
+
+def run_router_cell(scenario: str, router: str, duration: float,
+                    seed: int = 3) -> Dict:
+    sc = SCENARIOS[scenario](duration, scaler="static")
+    sc.seed = seed
+    sc.platform.router = router
+    t0 = time.perf_counter()
+    p = Platform.build(sc)
+    res = p.run()
+    wall = time.perf_counter() - t0
+    n_no_worker = sum(1 for r in res.requests
+                      if r.outcome == "503" and r.reject_reason == "no_invoker")
+    # cold-start pressure: how concentrated execution was on warm containers
+    execs = sum(inv.n_executed for inv in p.slurm.all_invokers)
+    warm_sets = sum(len(inv.warm_fns) for inv in p.slurm.all_invokers
+                    if inv.n_executed)
+    lat = next((cr for cr in res.per_class if cr.slo_class == "latency"), None)
+    return {
+        "wall_s": wall,
+        "n_submitted": res.n_submitted,
+        # NaN (nothing succeeded) -> None so the detail JSON stays strict
+        "p50_s": nan_to_none(res.response_p50),
+        "p95_s": nan_to_none(res.response_p95),
+        "n_503": res.outcome_counts.get("503", 0),
+        "rate_503": res.outcome_counts.get("503", 0) / max(res.n_submitted, 1),
+        "n_503_no_worker": n_no_worker,
+        "n_503_throttled": res.n_throttled,
+        "n_timeout": res.outcome_counts.get("timeout", 0),
+        # per-class percentiles are fabricated from a 0.0 placeholder when
+        # the class had no successes — report null, not perfect latency
+        "latency_class_p95_s": (lat.p95_s if lat is not None
+                                and lat.n_success > 0 else None),
+        "coverage": res.slurm_coverage,
+        "execs_per_warm_fn": execs / max(warm_sets, 1),
+    }
+
+
+def _fmt(x) -> str:
+    return "n/a" if nan_to_none(x) is None else f"{x:.3f}"
+
+
+def bench_routing(duration: float = 2 * HOUR) -> Tuple[List[Row], Dict]:
+    rows: List[Row] = []
+    detail: Dict[str, Dict] = {}
+    assert set(ROUTERS) <= set(available("router"))
+    for scenario in SCENARIOS:
+        for router in ROUTERS:
+            cell = run_router_cell(scenario, router, duration)
+            detail[f"{scenario}_{router}"] = cell
+            us = cell["wall_s"] * 1e6 / max(cell["n_submitted"], 1)
+            rows.append((
+                f"routing_{scenario}_{router}", us,
+                f"p50_s={_fmt(cell['p50_s'])};p95_s={_fmt(cell['p95_s'])};"
+                f"rate_503={cell['rate_503']:.4f};"
+                f"timeouts={cell['n_timeout']};"
+                f"execs_per_warm_fn={cell['execs_per_warm_fn']:.1f}"))
+        base = detail[f"{scenario}_hash"]
+        for router in ("least-loaded", "locality"):
+            c = detail[f"{scenario}_{router}"]
+            d_p95 = ("n/a" if c["p95_s"] is None or base["p95_s"] is None
+                     else f"{c['p95_s'] - base['p95_s']:+.3f}")
+            rows.append((
+                f"routing_{scenario}_{router}_vs_hash", 0.0,
+                f"d_p95_s={d_p95};"
+                f"d_503={c['n_503'] - base['n_503']:+d};"
+                f"d_timeouts={c['n_timeout'] - base['n_timeout']:+d}"))
+    return rows, {"routing": detail}

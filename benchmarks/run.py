@@ -1,10 +1,15 @@
-"""Benchmark driver: one function per paper table/figure + the roofline
-summary. Prints ``name,us_per_call,derived`` CSV (stdout) and writes detail
-JSON to results/bench_details.json.
+"""Benchmark driver: one function per paper table/figure + the multi-tenant
+and routing scenario grids + the roofline summary. Prints
+``name,us_per_call,derived`` CSV (stdout) and writes detail JSON to
+results/bench_details.json.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
-  --full : paper-length experiments (24 h days, 200-iter fig7) instead of the
-           default reduced durations.
+Usage: PYTHONPATH=src python -m benchmarks.run [--full|--smoke] [--only NAME]
+                                               [--list]
+  --full  : paper-length experiments (24 h days, 200-iter fig7) instead of
+            the default reduced durations.
+  --smoke : a few sim-minutes per bench — a CI-speed check that every bench
+            entry still executes end to end.
+  --list  : print the available bench names and exit.
 """
 from __future__ import annotations
 
@@ -49,30 +54,50 @@ def bench_roofline_summary():
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="a few sim-minutes per bench (CI execution check)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--list", action="store_true",
+                    help="print available bench names and exit")
     args = ap.parse_args()
+    if args.full and args.smoke:
+        ap.error("--full and --smoke are mutually exclusive")
 
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
     from benchmarks import multi_tenant as MT
     from benchmarks import paper_benches as PB
+    from benchmarks import routing as RT
 
-    day = 24 * HOUR if args.full else 6 * HOUR
-    resp = 24 * HOUR if args.full else 2 * HOUR
+    if args.smoke:
+        day = resp = grid = 5 * 60.0
+        fig7_iters = 3
+    elif args.full:
+        day, resp, grid, fig7_iters = 24 * HOUR, 24 * HOUR, 6 * HOUR, 200
+    else:
+        day, resp, grid, fig7_iters = 6 * HOUR, 2 * HOUR, 2 * HOUR, 50
     benches = {
         "fig1": lambda: PB.bench_fig1_trace(),
         "table1": lambda: PB.bench_table1(),
         "table2": lambda: PB.bench_table2_fib(day),
         "table3": lambda: PB.bench_table3_var(day),
         "fig5": lambda: PB.bench_fig5_responsiveness(resp),
-        "fig7": lambda: PB.bench_fig7_single_invocation(200 if args.full else 50),
-        "multitenant": lambda: MT.bench_multi_tenant(6 * HOUR if args.full
-                                                     else 2 * HOUR),
+        "fig7": lambda: PB.bench_fig7_single_invocation(fig7_iters),
+        "multitenant": lambda: MT.bench_multi_tenant(grid),
+        "routing": lambda: RT.bench_routing(grid),
         "roofline": bench_roofline_summary,
     }
+    if args.list:
+        print("\n".join(benches))
+        return
     if args.only:
-        benches = {k: v for k, v in benches.items() if k == args.only}
+        if args.only not in benches:
+            sys.stderr.write(f"unknown bench {args.only!r}; available: "
+                             f"{', '.join(benches)}\n")
+            sys.exit(2)
+        benches = {args.only: benches[args.only]}
 
     all_detail = {}
+    n_errors = 0
     print("name,us_per_call,derived")
     for key, fn in benches.items():
         t0 = time.time()
@@ -80,6 +105,7 @@ def main() -> None:
             rows, detail = fn()
         except Exception as e:  # keep the harness running
             print(f"{key},0,ERROR:{type(e).__name__}:{e}")
+            n_errors += 1
             continue
         all_detail.update(detail)
         for name, us, derived in rows:
@@ -88,6 +114,8 @@ def main() -> None:
     os.makedirs("results", exist_ok=True)
     with open("results/bench_details.json", "w") as f:
         json.dump(all_detail, f, indent=1, default=str)
+    if n_errors:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -14,8 +14,9 @@ import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs import get_config
-from repro.core import HarvestConfig, HarvestRuntime, TraceConfig
 from repro.data.pipeline import DataPipeline
+from repro.platform import Platform, ScenarioConfig, SchedulingSection, \
+    TraceSection, WorkloadSection
 from repro.models import init_params
 from repro.training.optimizer import OptimizerConfig, init_opt_state
 from repro.training.train_step import make_train_step
@@ -51,9 +52,11 @@ print(f"step 20 loss {float(m2['loss']):.4f} (continued across the resize; "
 
 print("== phase 3: harvest the freed capacity while degraded ==")
 for model in ("fib", "var"):
-    res = HarvestRuntime(HarvestConfig(model=model, duration=1800.0, qps=2.0,
-                                       seed=1),
-                         trace_cfg=TraceConfig(horizon=1800.0, seed=6)).run()
+    sc = ScenarioConfig(name=f"degraded_{model}", duration=1800.0, seed=1,
+                        trace=TraceSection(seed=6),
+                        workload=WorkloadSection(qps=2.0),
+                        scheduling=SchedulingSection(model=model))
+    res = Platform.build(sc).run()
     print(f"  {model}: coverage={res.slurm_coverage:.1%} "
           f"invoked={res.invoked_share:.1%} pilots={res.n_jobs_started}")
 

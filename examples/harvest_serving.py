@@ -15,10 +15,11 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import (CommercialBackend, FaaSWrapper, HarvestConfig,
-                        HarvestRuntime, Request, TraceConfig)
+from repro.core import CommercialBackend, FaaSWrapper
 from repro.models import init_params
-from repro.serving.engine import ServingEngine, make_faas_executor
+from repro.platform import (Platform, ScenarioConfig, SchedulingSection,
+                            ServingExecutor, TraceSection, WorkloadSection)
+from repro.serving.engine import ServingEngine
 
 
 def main():
@@ -32,12 +33,15 @@ def main():
     cfg = get_config("qwen2.5-3b", smoke=True)
     params = init_params(jax.random.PRNGKey(0), cfg)
     engine = ServingEngine(cfg, params, max_seq=64)
-    executor = make_faas_executor(engine, prompt_len=16, n_new=8)
 
-    hc = HarvestConfig(model="fib", duration=duration, qps=args.qps,
-                       n_functions=10, seed=0)
-    rt = HarvestRuntime(hc, trace_cfg=TraceConfig(horizon=duration, seed=4),
-                        executor=executor)
+    sc = ScenarioConfig(
+        name="harvest_serving", duration=duration, seed=0,
+        trace=TraceSection(seed=4),
+        workload=WorkloadSection(qps=args.qps, n_functions=10),
+        scheduling=SchedulingSection(model="fib"))
+    # same construction path as sim-only runs; only the executor seam differs
+    rt = Platform.build(sc, executor=ServingExecutor(engine, prompt_len=16,
+                                                     n_new=8))
 
     # Alg. 1 wrapper in front of the controller
     commercial = CommercialBackend(rt.sim, overhead=0.35, slowdown=1.176)

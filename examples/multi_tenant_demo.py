@@ -8,11 +8,11 @@ manager — and prints per-SLO-class latency/shed tables plus the supply-side
 comparison.
 
 Usage: PYTHONPATH=src python examples/multi_tenant_demo.py [--hours H]
+                                                           [--scenario F.json]
 """
 import argparse
 
-from repro.core import HarvestConfig, HarvestRuntime, TraceConfig
-from repro.faas import burst_suite
+from repro.platform import Platform, ScenarioConfig, resolve
 
 HOUR = 3600.0
 
@@ -20,24 +20,34 @@ HOUR = 3600.0
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--hours", type=float, default=2.0)
+    ap.add_argument("--scenario", default=None,
+                    help="JSON scenario file overriding the built-in preset")
     args = ap.parse_args()
     duration = args.hours * HOUR
 
-    suite = burst_suite()
-    print(f"workload suite ({suite.total_rate():.1f} QPS nominal):")
-    for c in suite.classes:
-        print(f"  {c.tenant:>5s}/{c.name:<8s} slo={c.slo_class:<12s} "
-              f"rate={c.rate:.2f}/s arrival={c.arrival:<8s} "
-              f"exec={c.exec_dist}({c.exec_mean*1e3:.0f}ms)")
+    base = (ScenarioConfig.from_file(args.scenario) if args.scenario
+            else ScenarioConfig.multi_tenant_burst(duration))
+    if base.workload.source == "suite":
+        suite = resolve("suite", base.workload.suite)(
+            scale=base.workload.suite_scale)
+        print(f"workload suite '{base.workload.suite}' "
+              f"({suite.total_rate():.1f} QPS nominal):")
+        for c in suite.classes:
+            print(f"  {c.tenant:>5s}/{c.name:<8s} slo={c.slo_class:<12s} "
+                  f"rate={c.rate:.2f}/s arrival={c.arrival:<8s} "
+                  f"exec={c.exec_dist}({c.exec_mean*1e3:.0f}ms)")
 
-    tc = TraceConfig(horizon=duration, avg_idle_nodes=11.85, full_share=0.006,
-                     seed=17)
+    # the adaptive scaler drives the fib supply mix; a var-model scenario
+    # file runs with its own configured scaler only
+    scalers = (("static", "adaptive") if base.scheduling.model == "fib"
+               else (base.scheduling.scaler,))
     results = {}
-    for scaler in ("static", "adaptive"):
-        cfg = HarvestConfig(model="fib", duration=duration, qps=0.0, seed=3,
-                            scaler=scaler)
-        res = HarvestRuntime(cfg, trace_cfg=tc, suite=suite,
-                             admission=True).run()
+    for scaler in scalers:
+        sc = ScenarioConfig.from_dict(base.to_dict())   # deep copy
+        if scaler != base.scheduling.scaler:
+            sc.scheduling.scaler_params = {}    # params belong to the file's
+            sc.scheduling.scaler = scaler       # own scaler only
+        res = Platform.build(sc).run()
         results[scaler] = res
         no_worker = sum(1 for r in res.requests if r.outcome == "503"
                         and r.reject_reason == "no_invoker")
@@ -48,6 +58,8 @@ def main():
         for cr in res.per_class:
             print("  " + cr.row())
 
+    if not {"static", "adaptive"} <= results.keys():
+        return
     s, a = results["static"], results["adaptive"]
     print("\n=== adaptive vs static ===")
     print(f"  coverage: {s.slurm_coverage:.2%} -> {a.slurm_coverage:.2%}")

@@ -14,8 +14,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
-from repro.core import HarvestConfig, HarvestRuntime, TraceConfig
 from repro.data.pipeline import DataPipeline
+from repro.platform import Platform, ScenarioConfig, SchedulingSection, \
+    WorkloadSection
 from repro.models import init_params
 from repro.serving.engine import ServingEngine
 from repro.training.optimizer import OptimizerConfig, init_opt_state
@@ -37,8 +38,10 @@ out = engine.generate(np.ones((1, 8), np.int32), n_new=8)
 print(f"decode: generated tokens {out[0].tolist()}")
 
 print("\n== 2. harvest layer (the paper) ==")
-hc = HarvestConfig(model="fib", duration=3600.0, qps=5.0, seed=0)
-res = HarvestRuntime(hc, trace_cfg=TraceConfig(horizon=3600.0, seed=0)).run()
+sc = ScenarioConfig(name="quickstart", duration=3600.0, seed=0,
+                    workload=WorkloadSection(qps=5.0),
+                    scheduling=SchedulingSection(model="fib"))
+res = Platform.build(sc).run()
 print(f"1h of cluster time: coverage={res.slurm_coverage:.1%} "
       f"(clairvoyant bound {res.sim_upper_bound:.1%}), "
       f"invoked={res.invoked_share:.1%}, pilots started={res.n_jobs_started}, "

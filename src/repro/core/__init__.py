@@ -1,22 +1,30 @@
 """The paper's contribution: HPC-Whisk — a FaaS layer harvesting idle
 capacity via low-priority preemptible pilot jobs, with dynamic-invoker
-OpenWhisk semantics (fast-lane hand-off, register/deregister), fib/var
-pilot-job supply models, and the Alg. 1 commercial-fallback wrapper."""
+OpenWhisk semantics (fast-lane hand-off, register/deregister, pluggable
+placement routers), fib/var pilot-job supply models, and the Alg. 1
+commercial-fallback wrapper.
+
+This package holds *mechanisms* only and never imports the policy layers —
+``repro.faas`` (multi-tenant policies) builds on it, and ``repro.platform``
+composes both (``Platform.build(ScenarioConfig)`` is where ``HarvestRuntime``
+and friends now live).
+"""
 from repro.core.controller import Controller
 from repro.core.coverage import JOB_LENGTH_SETS, simulate_coverage, table1
 from repro.core.events import Simulator
-from repro.core.harvest import HarvestConfig, HarvestResult, HarvestRuntime
 from repro.core.invoker import Invoker
 from repro.core.pilot import FIB_LENGTHS_MIN, JobManager
 from repro.core.cluster import PilotJob, SlurmSim
 from repro.core.queues import Request, Topic
+from repro.core.routing import HashRouter, LeastLoadedRouter, LocalityRouter
 from repro.core.trace import IdleWindow, TraceConfig, generate_trace, trace_stats
 from repro.core.wrapper import CommercialBackend, FaaSWrapper
 
 __all__ = [
     "Controller", "JOB_LENGTH_SETS", "simulate_coverage", "table1",
-    "Simulator", "HarvestConfig", "HarvestResult", "HarvestRuntime",
-    "Invoker", "FIB_LENGTHS_MIN", "JobManager", "PilotJob", "SlurmSim",
-    "Request", "Topic", "IdleWindow", "TraceConfig", "generate_trace",
+    "Simulator", "Invoker", "FIB_LENGTHS_MIN", "JobManager", "PilotJob",
+    "SlurmSim", "Request", "Topic",
+    "HashRouter", "LeastLoadedRouter", "LocalityRouter",
+    "IdleWindow", "TraceConfig", "generate_trace",
     "trace_stats", "CommercialBackend", "FaaSWrapper",
 ]

@@ -1,21 +1,17 @@
-"""Modified-OpenWhisk controller: hash-based routing to a *dynamic* set of
-invokers, per-invoker topics, the global fast-lane topic, continuous health
+"""Modified-OpenWhisk controller: policy-pluggable routing to a *dynamic* set
+of invokers, per-invoker topics, the global fast-lane topic, continuous health
 states, and 503 when no invoker is healthy (paper Sec. II, III-C, III-E).
 """
 from __future__ import annotations
 
-import hashlib
 from typing import Dict, List, Optional, TYPE_CHECKING
 
 from repro.core.events import Simulator
 from repro.core.queues import Request, Topic
+from repro.core.routing import HashRouter
 
 if TYPE_CHECKING:
     from repro.core.invoker import Invoker
-
-
-def _fn_hash(fn: str) -> int:
-    return int.from_bytes(hashlib.sha1(fn.encode()).digest()[:4], "big")
 
 
 class Controller:
@@ -25,16 +21,22 @@ class Controller:
     modification — which we implement — is (1) explicit register/deregister
     driven by the pilot-job lifecycle, (2) continuous worker-status messages
     (state transitions here), and (3) the fast-lane hand-off on SIGTERM.
+
+    Placement policy is delegated to an injected ``router`` (the paper's
+    behaviour, :class:`repro.core.routing.HashRouter`, is the default); the
+    controller keeps the mechanism: topics, health bookkeeping, admission,
+    timeouts, and the fast-lane hand-off.
     """
 
     def __init__(self, sim: Simulator, queue_depth_soft_limit: int = 64,
-                 admission=None, metrics=None):
+                 admission=None, metrics=None, router=None):
         self.sim = sim
         self.fast_lane = Topic("fast-lane")
         self.topics: Dict[int, Topic] = {}
         self.invokers: Dict[int, "Invoker"] = {}
         self._healthy_order: List[int] = []   # sorted ids of healthy invokers
         self.queue_depth_soft_limit = queue_depth_soft_limit
+        self.router = router if router is not None else HashRouter()
         # optional platform-layer plugins (repro.faas): SLO-aware admission
         # control in front of routing, and a metrics registry to publish into
         self.admission = admission
@@ -43,12 +45,18 @@ class Controller:
         self.rejected_503: List[Request] = []
         self.n_submitted = 0
 
+    @property
+    def healthy_order(self) -> List[int]:
+        """Sorted ids of currently-healthy invokers (read-only router surface)."""
+        return self._healthy_order
+
     # --- invoker lifecycle ------------------------------------------------
     def register(self, inv: "Invoker"):
         self.invokers[inv.id] = inv
         self.topics.setdefault(inv.id, Topic(f"invoker-{inv.id}"))
         self._healthy_order = sorted(
             i for i, v in self.invokers.items() if v.state == "healthy")
+        self.router.on_register(inv)
 
     def mark_unavailable(self, inv: "Invoker") -> int:
         """First SIGTERM action: no new requests; move unpulled to fast lane."""
@@ -70,6 +78,7 @@ class Controller:
             topic.drain_into(self.fast_lane)
         self._healthy_order = sorted(
             i for i, v in self.invokers.items() if v.state == "healthy")
+        self.router.on_deregister(inv)
         self._kick_all()
 
     # --- request path --------------------------------------------------------
@@ -90,17 +99,9 @@ class Controller:
             if not ok:
                 return self._reject(req, reason)
         req.t_invoked = self.sim.now
-        # hash routing with overload stepping (OpenWhisk-style)
-        n = len(self._healthy_order)
-        start = _fn_hash(req.fn) % n
-        chosen = None
-        for step in range(n):
-            cand = self._healthy_order[(start + step) % n]
-            if len(self.topics[cand]) < self.queue_depth_soft_limit:
-                chosen = cand
-                break
-        if chosen is None:
-            chosen = self._healthy_order[start]
+        chosen = self.router.route(req, self)
+        if chosen is None or chosen not in self.topics:
+            return self._reject(req, "no_invoker")
         self.topics[chosen].push(req)
         self.sim.at(req.arrival + req.timeout, self._check_timeout, req)
         self.invokers[chosen].kick()
@@ -109,6 +110,11 @@ class Controller:
     def _reject(self, req: Request, reason: str) -> bool:
         req.outcome = "503"
         req.reject_reason = reason
+        if self.admission is not None:
+            # a router may refuse placement AFTER admission admitted the
+            # request — give back its in-flight slot (no-op when the request
+            # was never admitted; release is id-guarded)
+            self.admission.release(req)
         self.rejected_503.append(req)
         if self.metrics is not None:
             self.metrics.counter("rejected_503_total", reason=reason).inc()

@@ -99,12 +99,13 @@ def simulate_coverage(windows: Sequence[IdleWindow], job_lengths_min: Sequence[i
         samples.append(cur)
         t += step
     samples = np.array(samples)
+    denom = total if total > 0 else 1.0   # no idle surface -> all shares 0
     return CoverageReport(
         set_name=set_name,
         n_jobs=n_jobs,
-        warmup_share=warmup / total,
-        ready_share=ready / total,
-        unused_share=1.0 - (warmup + ready) / total,
+        warmup_share=warmup / denom,
+        ready_share=ready / denom,
+        unused_share=1.0 - (warmup + ready) / denom,
         workers_p25=float(np.percentile(samples, 25)),
         workers_p50=float(np.percentile(samples, 50)),
         workers_p75=float(np.percentile(samples, 75)),

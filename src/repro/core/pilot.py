@@ -18,7 +18,7 @@ class JobManager:
                  per_length: int = 10, var_target: int = 100,
                  replenish_interval: float = 15.0, max_queued: int = 100,
                  time_min_s: float = 120.0, time_max_s: float = 7200.0,
-                 horizon: Optional[float] = None):
+                 horizon: Optional[float] = None, autostart: bool = True):
         assert model in ("fib", "var")
         self.sim = sim
         self.slurm = slurm
@@ -32,7 +32,16 @@ class JobManager:
         self.time_max_s = time_max_s
         self.horizon = horizon
         self.n_created = 0
-        sim.at(0.0, self._replenish)
+        self._started = False
+        if autostart:
+            self.start()
+
+    def start(self):
+        """Begin the replenish loop on the sim clock (Scaler seam; idempotent)."""
+        if self._started:
+            return
+        self._started = True
+        self.sim.at(0.0, self._replenish)
 
     def _replenish(self):
         counts = self.slurm.queued_counts()

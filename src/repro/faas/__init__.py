@@ -8,11 +8,12 @@ from repro.faas.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                 TimeSampler)
 from repro.faas.slo import ClassReport, SLOClass, default_slos, per_class_report
 from repro.faas.workloads import (FunctionClass, WorkloadSuite, burst_suite,
-                                  default_suite)
+                                  default_suite, serving_suite)
 
 __all__ = [
     "AdmissionController", "TokenBucket", "AdaptiveJobManager",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "TimeSampler",
     "ClassReport", "SLOClass", "default_slos", "per_class_report",
     "FunctionClass", "WorkloadSuite", "burst_suite", "default_suite",
+    "serving_suite",
 ]

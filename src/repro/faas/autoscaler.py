@@ -42,7 +42,8 @@ class AdaptiveJobManager:
                  max_queued: int = 100, interval: float = 5.0,
                  scale_min: float = 0.6, scale_max: float = 2.0,
                  horizon: Optional[float] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 autostart: bool = True):
         self.sim = sim
         self.slurm = slurm
         self.controller = controller
@@ -66,7 +67,16 @@ class AdaptiveJobManager:
                                           manager="adaptive")
             self._c_cancel = metrics.counter("pilot_jobs_cancelled_total",
                                              manager="adaptive")
-        sim.at(sim.now, self._tick)
+        self._started = False
+        if autostart:
+            self.start()
+
+    def start(self):
+        """Begin the control loop on the sim clock (Scaler seam; idempotent)."""
+        if self._started:
+            return
+        self._started = True
+        self.sim.at(self.sim.now, self._tick)
 
     # --- observation --------------------------------------------------------
     def _observe(self):

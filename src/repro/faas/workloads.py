@@ -209,3 +209,23 @@ def burst_suite(scale: float = 1.0) -> WorkloadSuite:
                       exec_dist="lognormal", exec_mean=0.030, exec_sigma=0.5,
                       timeout=60.0))
     return base
+
+
+def serving_suite(scale: float = 1.0) -> WorkloadSuite:
+    """Model-serving mix: a handful of heavy endpoints (sub-second to
+    seconds-long decode calls) instead of many tiny functions. Execution
+    time, not cold starts, dominates — the regime where *placement* decides
+    tail latency (head-of-line blocking on an invoker whose accelerator-bound
+    concurrency is small), stressing the Router seam rather than the warm
+    container cache."""
+    return WorkloadSuite(classes=[
+        FunctionClass(name="chat", tenant="ml", slo_class="latency",
+                      n_functions=6, rate=3.0 * scale, arrival="poisson",
+                      exec_dist="lognormal", exec_mean=0.8, exec_sigma=0.6,
+                      timeout=60.0),
+        FunctionClass(name="embed", tenant="ml", slo_class="best_effort",
+                      n_functions=4, rate=2.0 * scale, arrival="onoff",
+                      on_s=45.0, off_s=300.0, on_factor=12.0,
+                      exec_dist="lognormal", exec_mean=0.4, exec_sigma=0.5,
+                      timeout=60.0),
+    ])

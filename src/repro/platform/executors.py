@@ -1,0 +1,84 @@
+"""Executors: what actually runs when an invoker pulls a request.
+
+Sim-only and real-JAX runs share one construction path — the scenario's
+``platform.executor`` key resolves here, and the invoker calls whatever it
+gets the same way. :class:`SimExecutor` returns the request's nominal service
+time; :class:`ServingExecutor` performs a real bounded decode on a
+:class:`repro.serving.engine.ServingEngine` and returns measured wall
+seconds, which advance virtual time (the scheduling layer is oblivious —
+the paper's Sec. V-D setup).
+
+JAX (and the model zoo) are imported lazily inside the ``serving`` factory,
+so pure-simulation scenarios never pay the accelerator-stack import.
+"""
+from __future__ import annotations
+
+import time
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from repro.platform.registry import register
+
+if TYPE_CHECKING:
+    from repro.core.queues import Request
+    from repro.platform.runtime import Platform
+
+
+class SimExecutor:
+    """Pure simulation: the request carries its own service time."""
+
+    def __call__(self, req: "Request") -> float:
+        return req.exec_time
+
+
+class ServingExecutor:
+    """Real JAX execution: a bounded ``generate`` call on a serving engine;
+    the function name seeds the prompt so each FaaS function is a distinct,
+    reproducible decode."""
+
+    def __init__(self, engine, prompt_len: int = 16, n_new: int = 8):
+        self.engine = engine
+        self.prompt_len = prompt_len
+        self.n_new = n_new
+
+    def __call__(self, req: "Request") -> float:
+        rng = np.random.default_rng(abs(hash(req.fn)) % (2 ** 31))
+        prompt = rng.integers(0, self.engine.cfg.vocab_size,
+                              size=(1, self.prompt_len)).astype(np.int32)
+        t0 = time.perf_counter()
+        self.engine.generate(prompt, self.n_new)
+        return time.perf_counter() - t0
+
+
+@register("executor", "sim")
+def build_sim(platform: "Platform", **params) -> SimExecutor:
+    return SimExecutor(**params)
+
+
+@register("executor", "serving")
+def build_serving(platform: "Platform", *, engine=None, arch: str = "qwen2.5-3b",
+                  max_seq: int = 64, init_seed: int = 0,
+                  **params) -> ServingExecutor:
+    if engine is None:
+        import jax  # deferred: only real-JAX scenarios pay this import
+
+        from repro.configs import get_config
+        from repro.models import init_params
+        from repro.serving.engine import ServingEngine
+        cfg = get_config(arch, smoke=True)
+        model_params = init_params(jax.random.PRNGKey(init_seed), cfg)
+        engine = ServingEngine(cfg, model_params, max_seq=max_seq)
+    return ServingExecutor(engine, **params)
+
+
+def as_executor(obj):
+    """Validate an executor override: any ``request -> seconds`` callable
+    satisfies the Executor protocol and passes through; None stays None."""
+    if obj is None or callable(obj):
+        return obj
+    raise TypeError(f"executor override must be callable, got {type(obj)!r}")
+
+
+__all__ = ["SimExecutor", "ServingExecutor", "as_executor", "build_sim",
+           "build_serving"]

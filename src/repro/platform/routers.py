@@ -1,0 +1,14 @@
+"""Router registrations. The implementations live in
+:mod:`repro.core.routing` (the controller's default must not depend on the
+platform layer); this module binds them to registry keys and is the home for
+future platform-only routing policies."""
+from __future__ import annotations
+
+from repro.core.routing import HashRouter, LeastLoadedRouter, LocalityRouter
+from repro.platform.registry import register
+
+register("router", "hash")(HashRouter)
+register("router", "least-loaded")(LeastLoadedRouter)
+register("router", "locality")(LocalityRouter)
+
+__all__ = ["HashRouter", "LeastLoadedRouter", "LocalityRouter"]

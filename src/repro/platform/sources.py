@@ -1,0 +1,86 @@
+"""Workload sources: traffic generators behind the
+:class:`repro.platform.interfaces.WorkloadSource` seam, plus the named-suite
+registry used by declarative scenarios.
+
+Arrival *times* are drawn at schedule time (so heavy generators run once, up
+front), but per-request attribute draws (interruptibility, per-call exec
+times) happen inside the submit callbacks at event time — interleaved with
+the cluster sim's draws on the shared RNG exactly as the pre-seam runtime
+did, keeping seeded runs bit-for-bit reproducible.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from repro.faas.workloads import (WorkloadSuite, burst_suite, default_suite,
+                                  serving_suite)
+from repro.platform.registry import register, resolve
+
+if TYPE_CHECKING:
+    from repro.platform.runtime import Platform
+
+register("suite", "default")(default_suite)
+register("suite", "burst")(burst_suite)
+register("suite", "serving")(serving_suite)
+
+
+class UniformLoad:
+    """The paper's homogeneous load: ``qps`` requests/s over ``n_functions``
+    round-robin function names, constant-rate by default (the paper used a
+    constant 10 QPS) or Poisson."""
+
+    def __init__(self, qps: float = 10.0, n_functions: int = 100,
+                 poisson: bool = False):
+        self.qps = qps
+        self.n_functions = n_functions
+        self.poisson = poisson
+
+    def schedule(self, platform: "Platform") -> None:
+        duration = platform.scenario.duration
+        if self.qps <= 0:
+            return
+        n = int(duration * self.qps)
+        if self.poisson:
+            gaps = platform.rng.exponential(1.0 / self.qps, size=n)
+            times = np.cumsum(gaps)
+        else:
+            times = (np.arange(n) + 1) / self.qps
+        for i, t in enumerate(times):
+            if t >= duration:
+                break
+            fn = f"fn-{i % self.n_functions:03d}"
+            platform.sim.at(float(t), platform.submit, fn)
+
+
+class SuiteLoad:
+    """Multi-tenant traffic from a :class:`WorkloadSuite`: one merged,
+    time-sorted arrival stream over all function classes."""
+
+    def __init__(self, suite: WorkloadSuite):
+        self.suite = suite
+
+    def schedule(self, platform: "Platform") -> None:
+        duration = platform.scenario.duration
+        for t, cls, fn in self.suite.events(platform.rng, duration):
+            platform.sim.at(t, platform.submit_class, cls, fn)
+
+
+@register("workload", "uniform")
+def build_uniform(platform: "Platform", **params) -> UniformLoad:
+    w = platform.scenario.workload
+    params.setdefault("qps", w.qps)
+    params.setdefault("n_functions", w.n_functions)
+    params.setdefault("poisson", w.poisson)
+    return UniformLoad(**params)
+
+
+@register("workload", "suite")
+def build_suite(platform: "Platform", **params) -> SuiteLoad:
+    w = platform.scenario.workload
+    factory = resolve("suite", w.suite)
+    return SuiteLoad(factory(scale=w.suite_scale, **params))
+
+
+__all__ = ["UniformLoad", "SuiteLoad", "build_uniform", "build_suite"]

@@ -71,18 +71,5 @@ class ServingEngine:
         return float(loss)
 
 
-def make_faas_executor(engine: ServingEngine, prompt_len: int = 16,
-                       n_new: int = 8):
-    """Adapter: a FaaS request -> real JAX execution on the invoker's engine.
-    Returns measured wall seconds (advances the harvest sim's virtual clock)."""
-    import time
-
-    def executor(request) -> float:
-        rng = np.random.default_rng(abs(hash(request.fn)) % (2 ** 31))
-        prompt = rng.integers(0, engine.cfg.vocab_size,
-                              size=(1, prompt_len)).astype(np.int32)
-        t0 = time.perf_counter()
-        engine.generate(prompt, n_new)
-        return time.perf_counter() - t0
-
-    return executor
+# FaaS-request -> real-execution adaptation lives behind the platform's
+# Executor seam: see repro.platform.executors.ServingExecutor.

@@ -7,8 +7,6 @@ from repro.core import (
     CommercialBackend,
     Controller,
     FaaSWrapper,
-    HarvestConfig,
-    HarvestRuntime,
     Invoker,
     JOB_LENGTH_SETS,
     Request,
@@ -20,6 +18,7 @@ from repro.core import (
 )
 from repro.core.coverage import greedy_fill
 from repro.core.trace import IdleWindow
+from repro.platform import HarvestConfig, HarvestRuntime
 
 HOUR = 3600.0
 

@@ -4,11 +4,11 @@ demand-adaptive pilot supply end-to-end against the static fib baseline."""
 import numpy as np
 import pytest
 
-from repro.core import Controller, HarvestConfig, HarvestRuntime, Request, \
-    Simulator, TraceConfig
+from repro.core import Controller, Request, Simulator, TraceConfig
 from repro.faas import (AdmissionController, MetricsRegistry, TimeSampler,
                         TokenBucket, burst_suite, default_slos, default_suite)
 from repro.faas.workloads import FunctionClass
+from repro.platform import HarvestConfig, HarvestRuntime
 
 HOUR = 3600.0
 

@@ -11,10 +11,11 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import HarvestConfig, HarvestRuntime, TraceConfig
 from repro.launch.train import TrainConfig, train
 from repro.models import init_params
-from repro.serving.engine import ServingEngine, make_faas_executor
+from repro.platform import (Platform, ScenarioConfig, SchedulingSection,
+                            ServingExecutor, TraceSection, WorkloadSection)
+from repro.serving.engine import ServingEngine
 
 pytestmark = pytest.mark.slow  # JAX tier: excluded from the fast core-sim run
 
@@ -27,10 +28,11 @@ def test_harvest_executes_real_jax_inference():
     cfg = get_config("qwen2.5-3b", smoke=True)
     params = init_params(jax.random.PRNGKey(0), cfg)
     engine = ServingEngine(cfg, params, max_seq=48)
-    executor = make_faas_executor(engine, prompt_len=8, n_new=4)
-    hc = HarvestConfig(model="fib", duration=900.0, qps=0.2, n_functions=4, seed=0)
-    rt = HarvestRuntime(hc, trace_cfg=TraceConfig(horizon=900.0, seed=4),
-                        executor=executor)
+    sc = ScenarioConfig(duration=900.0, seed=0, trace=TraceSection(seed=4),
+                        workload=WorkloadSection(qps=0.2, n_functions=4),
+                        scheduling=SchedulingSection(model="fib"))
+    rt = Platform.build(sc, executor=ServingExecutor(engine, prompt_len=8,
+                                                     n_new=4))
     res = rt.run()
     done = [r for r in res.requests if r.outcome == "success"]
     assert len(done) >= 1
@@ -53,10 +55,9 @@ def test_train_failure_restart_continues_loss_curve():
 def test_fib_day_headline_numbers():
     """Reduced (3h) version of Table II: coverage close to the clairvoyant
     bound, high invoked share."""
-    tc = TraceConfig(horizon=3 * HOUR, avg_idle_nodes=11.85, full_share=0.006,
-                     seed=17)
-    res = HarvestRuntime(HarvestConfig(model="fib", duration=3 * HOUR, qps=2.0,
-                                       seed=3), trace_cfg=tc).run()
+    sc = ScenarioConfig.fib_day(3 * HOUR, qps=2.0)
+    sc.workload.non_interruptible_share = 0.0
+    res = Platform.build(sc).run()
     assert res.slurm_coverage > 0.75
     assert res.slurm_coverage > 0.85 * res.sim_upper_bound
     assert res.invoked_share > 0.9

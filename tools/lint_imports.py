@@ -1,0 +1,156 @@
+#!/usr/bin/env python
+"""Import-layering lint for the harvest stack.
+
+Enforces the package layering that makes the seams composable:
+
+    repro.core  (paper mechanisms)      imports no policy layer
+    repro.faas  (multi-tenant policies) may import repro.core
+    repro.platform (composition)        may import both
+
+Violations of that order — and *any* import cycle between top-level
+``repro.*`` packages — fail the build. Only module-level imports count
+(``if TYPE_CHECKING:`` blocks and function-local imports are free: they
+cannot create an import-time cycle).
+
+Usage: python tools/lint_imports.py [src_dir]   (exit 0 = clean)
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+from typing import Dict, Iterable, List, Set, Tuple
+
+# importer -> packages it must never import at module level
+LAYERING = {
+    "core": {"faas", "platform"},
+    "faas": {"platform"},
+}
+
+
+def _is_type_checking(test: ast.expr) -> bool:
+    return ((isinstance(test, ast.Name) and test.id == "TYPE_CHECKING")
+            or (isinstance(test, ast.Attribute)
+                and test.attr == "TYPE_CHECKING"))
+
+
+def _module_level_imports(body: Iterable[ast.stmt]) -> Set[Tuple[int, str]]:
+    """``(relative_level, dotted_name)`` pairs imported at module level
+    (level 0 = absolute), following into top-level If/Try blocks but not
+    into TYPE_CHECKING guards or defs."""
+    out: Set[Tuple[int, str]] = set()
+    for node in body:
+        if isinstance(node, ast.Import):
+            out.update((0, a.name) for a in node.names)
+        elif isinstance(node, ast.ImportFrom):
+            if node.module:
+                out.add((node.level, node.module))
+            else:   # "from . import x" / "from .. import y"
+                out.update((node.level, a.name) for a in node.names)
+        elif isinstance(node, ast.If):
+            if not _is_type_checking(node.test):
+                out |= _module_level_imports(node.body)
+            out |= _module_level_imports(node.orelse)
+        elif isinstance(node, ast.Try):
+            for blk in (node.body, node.orelse, node.finalbody):
+                out |= _module_level_imports(blk)
+            for h in node.handlers:
+                out |= _module_level_imports(h.body)
+    return out
+
+
+def _resolve(module: str, level: int, name: str) -> str:
+    """Absolute dotted target of an import found in ``module`` (dotted path,
+    ``__init__`` suffix stripped by the caller)."""
+    if level == 0:
+        return name
+    pkg = module.split(".")[:-1]        # containing package of the module
+    base = pkg if level == 1 else pkg[:len(pkg) - (level - 1)]
+    if level > 1 and len(pkg) < level - 1:
+        return name                     # beyond the tree root; leave as-is
+    return ".".join(base + [name]) if name else ".".join(base)
+
+
+def package_edges(src: str) -> Tuple[Dict[str, Set[str]], List[str]]:
+    """(pkg -> imported pkgs) over top-level packages under src/repro, plus
+    the per-module edge provenance for error messages."""
+    root = os.path.join(src, "repro")
+    edges: Dict[str, Set[str]] = {}
+    provenance: List[str] = []
+    for dirpath, _, files in os.walk(root):
+        for fname in files:
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            # keep the "__init__" segment: a package's containing package for
+            # relative-import resolution is then uniformly parts[:-1]
+            rel = os.path.relpath(path, src)[:-3].replace(os.sep, ".")
+            parts = rel.split(".")
+            pkg = parts[1] if len(parts) > 1 else ""
+            with open(path) as f:
+                tree = ast.parse(f.read(), filename=path)
+            for level, name in _module_level_imports(tree.body):
+                mod = _resolve(rel, level, name)
+                mparts = mod.split(".")
+                if mparts[0] != "repro" or len(mparts) < 2:
+                    continue
+                tgt = mparts[1]
+                if tgt and pkg and tgt != pkg:
+                    edges.setdefault(pkg, set()).add(tgt)
+                    provenance.append(f"{rel} -> {mod}")
+    return edges, provenance
+
+
+def find_cycle(edges: Dict[str, Set[str]]) -> List[str]:
+    state: Dict[str, int] = {}   # 0 visiting, 1 done
+    stack: List[str] = []
+
+    def dfs(n: str) -> List[str]:
+        state[n] = 0
+        stack.append(n)
+        for m in sorted(edges.get(n, ())):
+            if state.get(m) == 0:
+                return stack[stack.index(m):] + [m]
+            if m not in state:
+                cyc = dfs(m)
+                if cyc:
+                    return cyc
+        state[n] = 1
+        stack.pop()
+        return []
+
+    for n in sorted(edges):
+        if n not in state:
+            cyc = dfs(n)
+            if cyc:
+                return cyc
+    return []
+
+
+def main() -> int:
+    src = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "src")
+    edges, provenance = package_edges(src)
+    failures = []
+    for importer, forbidden in LAYERING.items():
+        bad = edges.get(importer, set()) & forbidden
+        for tgt in sorted(bad):
+            detail = [p for p in provenance
+                      if p.startswith(f"repro.{importer}")
+                      and f"-> repro.{tgt}" in p]
+            failures.append(f"layering violation: repro.{importer} must not "
+                            f"import repro.{tgt} ({'; '.join(detail)})")
+    cycle = find_cycle(edges)
+    if cycle:
+        failures.append("import cycle between repro packages: "
+                        + " -> ".join(cycle))
+    if failures:
+        print("\n".join(failures), file=sys.stderr)
+        return 1
+    print(f"import layering OK ({sum(len(v) for v in edges.values())} "
+          f"cross-package edges, no cycles)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
