@@ -43,9 +43,8 @@ def run_router_cell(scenario: str, router: str, duration: float,
     n_no_worker = sum(1 for r in res.requests
                       if r.outcome == "503" and r.reject_reason == "no_invoker")
     # cold-start pressure: how concentrated execution was on warm containers
-    execs = sum(inv.n_executed for inv in p.slurm.all_invokers)
-    warm_sets = sum(len(inv.warm_fns) for inv in p.slurm.all_invokers
-                    if inv.n_executed)
+    execs = p.slurm.total_executed()
+    warm_sets = p.slurm.total_warm_fns()
     lat = next((cr for cr in res.per_class if cr.slo_class == "latency"), None)
     return {
         "wall_s": wall,

@@ -1,0 +1,190 @@
+"""Cluster-scale sweep for the harvest simulator core.
+
+The paper's headline runs on a ~50k-core production cluster; this benchmark
+sweeps the node count (500 -> 5k -> 50k) on a 24 h day for both supply models
+and reports wall-time, peak RSS, and processed events/sec per point, writing
+``results/BENCH_scale.json``. Each point runs in its own subprocess so peak
+RSS is attributable to that point alone.
+
+The same file measures the pre- and post-optimisation core: run it once with
+``--label before`` on the old tree and once with ``--label after`` — the JSON
+merges both and derives per-point improvement factors.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.scale [--nodes 500,5000,50000]
+      [--models fib,var] [--duration 86400] [--qps 5.0] [--label after]
+      [--out results/BENCH_scale.json] [--smoke]
+
+  --smoke : CI-sized point (2k nodes, 2 simulated hours, fib) that still
+            exercises the full stack; fails loudly on any bench error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import subprocess
+import sys
+import time
+
+DAY = 24 * 3600.0
+PAPER_NODES = 2239       # nodes behind the paper's Prometheus statistics
+PAPER_AVG_IDLE = 9.23    # avg simultaneously-idle nodes on that cluster
+
+
+def run_point(nodes: int, model: str, duration: float, qps: float,
+              seed: int) -> dict:
+    """Build + run one scenario in-process and measure it."""
+    from repro.core.trace import TraceConfig
+    from repro.platform import (Platform, ScenarioConfig, SchedulingSection,
+                                WorkloadSection)
+
+    # idle supply scales with cluster size (same per-node idle statistics)
+    tc = TraceConfig(horizon=duration, n_nodes=nodes,
+                     avg_idle_nodes=PAPER_AVG_IDLE * nodes / PAPER_NODES,
+                     full_share=0.006, seed=seed + nodes)
+    sc = ScenarioConfig(
+        name=f"scale_{model}_{nodes}", duration=duration, seed=seed,
+        workload=WorkloadSection(qps=qps, non_interruptible_share=0.1),
+        scheduling=SchedulingSection(model=model))
+    t0 = time.perf_counter()
+    p = Platform.build(sc, trace_cfg=tc)
+    build_s = time.perf_counter() - t0
+    t1 = time.perf_counter()
+    res = p.run()
+    run_s = time.perf_counter() - t1
+    n_events = getattr(p.sim, "n_processed", None)
+    rss_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return {
+        "nodes": nodes, "model": model, "duration_s": duration, "qps": qps,
+        "seed": seed,
+        "n_windows": len(p.windows),
+        "build_s": round(build_s, 3),
+        "run_s": round(run_s, 3),
+        "wall_s": round(build_s + run_s, 3),
+        "peak_rss_mb": round(rss_kb / 1024.0, 1),
+        "n_events": n_events,
+        "events_per_sec": (round(n_events / run_s) if n_events else None),
+        "n_submitted": res.n_submitted,
+        "n_jobs_started": res.n_jobs_started,
+        "n_evicted": res.n_evicted,
+        "coverage": round(res.slurm_coverage, 4),
+        "outcome_counts": res.outcome_counts,
+    }
+
+
+def _run_subprocess(spec: dict) -> dict:
+    """Run one point in a child interpreter (isolated peak RSS)."""
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.scale", "--one", json.dumps(spec)],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"scale point {spec} failed:\n{proc.stdout}\n{proc.stderr}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", default="500,5000,50000")
+    ap.add_argument("--models", default="fib,var")
+    ap.add_argument("--duration", type=float, default=DAY)
+    ap.add_argument("--qps", type=float, default=0.5,
+                    help="modest fixed FaaS load: the sweep measures how the "
+                         "core scales with NODES, not request throughput")
+    ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="measure each point N times, keep the fastest "
+                         "(wall-time min is the standard noise filter)")
+    ap.add_argument("--label", default="after",
+                    help="result bucket: 'before' (pre-PR core) or 'after'")
+    ap.add_argument("--out", default="results/BENCH_scale.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one CI-sized point: 2k nodes, 2 sim-hours, fib")
+    ap.add_argument("--inline", action="store_true",
+                    help="run points in-process (shared RSS; debugging)")
+    ap.add_argument("--one", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    if args.one is not None:
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                        "src"))
+        print(json.dumps(run_point(**json.loads(args.one))))
+        return
+
+    if args.smoke:
+        points = [(2000, "fib")]
+        args.duration = 2 * 3600.0
+    else:
+        nodes = [int(n) for n in args.nodes.split(",") if n]
+        models = [m for m in args.models.split(",") if m]
+        points = [(n, m) for n in nodes for m in models]
+
+    if args.inline:
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                        "src"))
+
+    # every point record carries its own duration/qps/seed, so merged files
+    # stay self-describing even when labels were run with different knobs
+    doc = {"runs": {}}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            doc = json.load(f)
+        doc.setdefault("runs", {})
+        doc.pop("config", None)
+    bucket = doc["runs"].setdefault(args.label, {})
+
+    n_errors = 0
+    print("point,wall_s,run_s,peak_rss_mb,events_per_sec,coverage")
+    for nodes, model in points:
+        spec = dict(nodes=nodes, model=model, duration=args.duration,
+                    qps=args.qps, seed=args.seed)
+        key = f"{model}@{nodes}"
+        t0 = time.time()
+        try:
+            recs = [run_point(**spec) if args.inline
+                    else _run_subprocess(spec)
+                    for _ in range(max(args.repeats, 1))]
+            rec = min(recs, key=lambda r: r["run_s"])
+            rec["repeats"] = len(recs)
+        except Exception as e:
+            print(f"{key},ERROR:{type(e).__name__}:{e}")
+            n_errors += 1
+            continue
+        bucket[key] = rec
+        eps = rec["events_per_sec"]
+        print(f"{key},{rec['wall_s']},{rec['run_s']},{rec['peak_rss_mb']},"
+              f"{eps if eps is not None else 'n/a'},{rec['coverage']}")
+        sys.stderr.write(f"[{key}: {time.time()-t0:.1f}s]\n")
+
+    # derive before/after improvement wherever both buckets hold the point
+    # measured under the SAME knobs — never compare apples to oranges
+    before, after = doc["runs"].get("before", {}), doc["runs"].get("after", {})
+
+    def comparable(a, b):
+        return all(a.get(f) == b.get(f)
+                   for f in ("duration_s", "qps", "seed"))
+
+    doc["improvement"] = {
+        k: {"wall_x": round(before[k]["wall_s"] / max(after[k]["wall_s"],
+                                                      1e-9), 2),
+            "run_x": round(before[k]["run_s"] / max(after[k]["run_s"],
+                                                    1e-9), 2)}
+        for k in sorted(set(before) & set(after))
+        if comparable(before[k], after[k])}
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+    sys.stderr.write(f"wrote {args.out}\n")
+    if n_errors:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,13 +16,24 @@ SIGTERM and has a grace period before SIGKILL (PreemptMode=CANCEL, 3 min).
 Coverage accounting clips pilot time at the actual window end: the grace tail
 runs on the prime job's time, exactly like the <=3-minute delay the paper
 accepts.
+
+Cluster-scale hot paths (50k nodes, 24 h) are kept sub-linear in history:
+
+  - a *vacancy index* (nodes currently idle AND invoker-free) so a scheduling
+    pass visits candidates instead of every node that ever opened a window;
+  - a length-bucketed job queue (per-length FIFO deques + a sorted length
+    index) giving O(log L) picks and O(1) dequeues instead of O(queue) scans
+    with ``list.remove``;
+  - live-only invoker registries plus monotonic aggregate counters, so gauges
+    and health bookkeeping never rescan the day's full job history.
 """
 from __future__ import annotations
 
+import bisect
 import collections
 import dataclasses
 import itertools
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Deque, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -46,6 +57,7 @@ class PilotJob:
 
 @dataclasses.dataclass
 class _NodeState:
+    order: int              # first-seen rank; preserves historical pass order
     window: Optional[IdleWindow] = None
     invoker: Optional[Invoker] = None
     job: Optional[PilotJob] = None
@@ -74,9 +86,25 @@ class SlurmSim:
         self.chain_on_exit = chain_on_exit
         self.invoker_kwargs = invoker_kwargs or {}
         self.nodes: Dict[int, _NodeState] = {}
-        self.queue: List[PilotJob] = []
+        # vacancy index: node ids whose window is open and invoker-free right
+        # now — exactly the candidate set a scheduling pass has to consider
+        self._vacant: set = set()
+        # queued pilot jobs, length-bucketed. Fixed lengths each get a FIFO
+        # deque plus an entry in the sorted ``_length_index`` while non-empty;
+        # var (flexible) jobs live in their own deque. Cancellations are lazy
+        # (state flip + count decrement); deques shed dead heads on access.
+        self._buckets: Dict[float, Deque[PilotJob]] = {}
+        self._var_q: Deque[PilotJob] = collections.deque()
+        self._counts: Dict[Optional[float], int] = {}
+        self._length_index: List[float] = []
+        self._queued_ids: set = set()
         self.on_job_started: Optional[Callable[[PilotJob], None]] = None
-        self.all_invokers: List[Invoker] = []
+        # live invokers only; exited ones fold into the aggregates below
+        self.live_invokers: Dict[int, Invoker] = {}
+        self.n_exited = 0
+        self.exited_executed = 0      # sum of n_executed over exited invokers
+        self.exited_warm_fns = 0      # sum of warm-container sets at exit
+        self.exit_log: List[Tuple[int, float, float]] = []  # (node, t_created, t_dead)
         # accounting
         self.idle_time_total = sum(w.length for w in windows)
         self.pilot_time = 0.0
@@ -87,16 +115,47 @@ class SlurmSim:
         self.recent_window_lengths: collections.deque = collections.deque(maxlen=64)
         self._last_expedite = -1e9
         self._horizon = max((w.end for w in windows), default=0.0)
-        for w in windows:
-            self.sim.at(w.start, self._window_open, w)
-            self.sim.at(w.end, self._window_close, w)
+        # The trace is exogenous and fully known: feed its open/close events
+        # into the heap lazily (one sentinel at a time over a pre-sorted
+        # stream) instead of parking 2xW events there for the whole day —
+        # the heap stays proportional to in-flight work. Tie order matches
+        # scheduling everything upfront: window events always fired first at
+        # equal times (globally smallest seqs), which at_front preserves, and
+        # the stream is sorted by (time, original scheduling order).
+        stream = []
+        for i, w in enumerate(windows):
+            stream.append((w.start, 2 * i, self._window_open, w))
+            stream.append((w.end, 2 * i + 1, self._window_close, w))
+        stream.sort(key=lambda e: (e[0], e[1]))
+        self._window_stream = stream
+        self._ws_idx = 0
+        if stream:
+            self.sim.at_front(stream[0][0], self._feed_window_events_due)
         self.sim.at(0.0, self._sched_pass)
+
+    def _feed_window_events_due(self):
+        """Fire every window event due now, then arm one sentinel for the
+        next batch (only one sentinel is ever alive, so at_front's
+        latest-first tie rule between sentinels never applies)."""
+        stream, n = self._window_stream, len(self._window_stream)
+        i = self._ws_idx
+        while i < n and stream[i][0] <= self.sim.now:
+            _, _, fn, w = stream[i]
+            i += 1
+            self._ws_idx = i
+            fn(w)
+        if i < n:
+            self.sim.at_front(stream[i][0], self._feed_window_events_due)
 
     # --- trace events ---------------------------------------------------------
     def _window_open(self, w: IdleWindow):
-        st = self.nodes.setdefault(w.node, _NodeState())
+        st = self.nodes.get(w.node)
+        if st is None:
+            st = self.nodes[w.node] = _NodeState(order=len(self.nodes))
         st.window = w
         st.pred_end = w.predicted_end
+        if st.invoker is None:
+            self._vacant.add(w.node)
 
     def _window_close(self, w: IdleWindow):
         st = self.nodes.get(w.node)
@@ -109,6 +168,7 @@ class SlurmSim:
             self.sim.after(self.grace, self._force_kill, inv)
         self.recent_window_lengths.append(w.length)
         st.window = None
+        self._vacant.discard(w.node)
 
     def _force_kill(self, inv: Invoker):
         if inv.state != "dead":
@@ -122,10 +182,12 @@ class SlurmSim:
 
     def _do_pass(self):
         placed = 0
-        for node, st in self.nodes.items():
+        # visit vacant nodes in first-seen order — the iteration order of the
+        # historical every-node scan, so seeded runs stay bit-identical
+        for node in sorted(self._vacant, key=lambda n: self.nodes[n].order):
             if self.pass_budget is not None and placed >= self.pass_budget:
                 break
-            if self._try_place(node, st):
+            if self._try_place(node, self.nodes[node]):
                 placed += 1
         return placed
 
@@ -153,22 +215,67 @@ class SlurmSim:
         self._start_job(node, st, job, remaining_pred)
         return True
 
+    # --- job queue (length buckets) -------------------------------------------
+    def _bucket_head(self, ell: float) -> PilotJob:
+        q = self._buckets[ell]
+        while q[0].state != "queued":    # shed lazily-cancelled heads
+            q.popleft()
+        return q[0]
+
+    def _count_inc(self, key: Optional[float]):
+        n = self._counts.get(key, 0)
+        self._counts[key] = n + 1
+        if n == 0 and key is not None:
+            bisect.insort(self._length_index, key)
+
+    def _count_dec(self, key: Optional[float]):
+        n = self._counts[key] - 1
+        if n:
+            self._counts[key] = n
+        else:
+            del self._counts[key]
+            if key is not None:
+                self._length_index.pop(
+                    bisect.bisect_left(self._length_index, key))
+
     def _pick_job(self, remaining_pred: float) -> Optional[PilotJob]:
-        best: Optional[PilotJob] = None
-        for job in self.queue:
-            if job.length_s is not None:
-                if job.length_s <= remaining_pred and (
-                        best is None or best.length_s is None
-                        or job.length_s > best.length_s):
-                    best = job
-            else:  # var: any flexible job fits if time_min does
-                if job.time_min_s <= remaining_pred and best is None:
-                    best = job
-        return best
+        """Longest fixed-length job that fits the predicted window, FIFO
+        within a length; a flexible (var) job only when no fixed one fits —
+        the priority order of the historical whole-queue scan."""
+        i = bisect.bisect_right(self._length_index, remaining_pred)
+        if i:
+            return self._bucket_head(self._length_index[i - 1])
+        if self._counts.get(None, 0):
+            for job in self._var_q:
+                if job.state == "queued" and job.time_min_s <= remaining_pred:
+                    return job
+        return None
+
+    def _take_job(self, job: PilotJob):
+        self._queued_ids.discard(job.id)
+        self._count_dec(job.length_s)
+        if job.length_s is None:
+            while self._var_q and self._var_q[0].state != "queued":
+                self._var_q.popleft()
+            if self._var_q and self._var_q[0] is job:
+                self._var_q.popleft()
+            else:                       # mid-queue var pick (rare)
+                self._var_q.remove(job)
+        else:
+            q = self._buckets[job.length_s]
+            assert q[0] is job          # picks always take the bucket head
+            q.popleft()
+
+    def iter_queued(self, length_s: Optional[float]) -> Iterator[PilotJob]:
+        """Still-queued jobs of one length bucket in FIFO order."""
+        q = self._var_q if length_s is None else self._buckets.get(length_s, ())
+        for job in q:
+            if job.state == "queued":
+                yield job
 
     def _start_job(self, node: int, st: _NodeState, job: PilotJob,
                    remaining_pred: float):
-        self.queue.remove(job)
+        self._take_job(job)
         job.state = "running"
         if job.length_s is not None:
             duration = job.length_s
@@ -186,12 +293,19 @@ class SlurmSim:
         inv._slurm_node = node          # backref for exit handling
         inv._slurm_start = self.sim.now
         inv._slurm_window = st.window   # the window this invoker was placed in
-        self.all_invokers.append(inv)
+        self.live_invokers[inv.id] = inv
+        self._vacant.discard(node)
         self.n_started += 1
         if self.on_job_started:
             self.on_job_started(job)
 
     def _on_invoker_exit(self, inv: Invoker):
+        self.live_invokers.pop(inv.id, None)
+        self.n_exited += 1
+        self.exited_executed += inv.n_executed
+        if inv.n_executed:      # warm sets on idle invokers are not "warm"
+            self.exited_warm_fns += len(inv.warm_fns)
+        self.exit_log.append((inv.node, inv.t_created, self.sim.now))
         node = getattr(inv, "_slurm_node", None)
         st = self.nodes.get(node)
         if st is not None and st.invoker is inv:
@@ -199,6 +313,8 @@ class SlurmSim:
             if st.job is not None:
                 st.job.state = "done"
                 st.job = None
+            if st.window is not None:
+                self._vacant.add(node)
         # coverage accounting: clip pilot time at the actual end of the window
         # the invoker was PLACED in — st.window may already belong to a newer
         # window that opened on the node before this invoker finished exiting.
@@ -215,7 +331,14 @@ class SlurmSim:
         """Queue pilot jobs. With ``expedite``, run a quick scheduling pass
         right away (Slurm triggers its quick scheduler on job submission;
         rate-limited to once per second like sched_min_interval)."""
-        self.queue.extend(jobs)
+        for job in jobs:
+            if job.length_s is None:
+                self._var_q.append(job)
+            else:
+                self._buckets.setdefault(
+                    job.length_s, collections.deque()).append(job)
+            self._queued_ids.add(job.id)
+            self._count_inc(job.length_s)
         if expedite and self.sim.now - self._last_expedite >= 1.0:
             self._last_expedite = self.sim.now
             self.sim.after(0.0, self._do_pass)
@@ -224,25 +347,34 @@ class SlurmSim:
         """scancel still-queued pilot jobs (supply scale-down)."""
         n = 0
         for j in jobs:
-            if j in self.queue:
-                self.queue.remove(j)
-                j.state = "cancelled"
+            if j.id in self._queued_ids:
+                self._queued_ids.discard(j.id)
+                self._count_dec(j.length_s)
+                j.state = "cancelled"   # physically dropped when it surfaces
                 n += 1
         return n
 
     def queued_counts(self) -> Dict[Optional[float], int]:
-        out: Dict[Optional[float], int] = {}
-        for j in self.queue:
-            out[j.length_s] = out.get(j.length_s, 0) + 1
-        return out
+        return dict(self._counts)
+
+    def total_executed(self) -> int:
+        """Requests executed across the whole day (exited + live invokers)."""
+        return self.exited_executed + sum(
+            inv.n_executed for inv in self.live_invokers.values())
+
+    def total_warm_fns(self) -> int:
+        """Warm-container sets summed over exited + live invokers (counting,
+        like the exited-side aggregate, only invokers that executed work)."""
+        return self.exited_warm_fns + sum(
+            len(inv.warm_fns) for inv in self.live_invokers.values()
+            if inv.n_executed)
 
     def coverage(self) -> float:
         """Share of idle surface covered by running pilot jobs (Slurm-level)."""
         live = 0.0
-        for st in self.nodes.values():
-            if st.invoker is not None and st.invoker.state != "dead":
-                w = getattr(st.invoker, "_slurm_window", None)
-                w_end = w.end if w is not None else self.sim.now
-                end_counted = min(self.sim.now, w_end)
-                live += max(0.0, end_counted - st.invoker._slurm_start)
+        for inv in self.live_invokers.values():
+            w = getattr(inv, "_slurm_window", None)
+            w_end = w.end if w is not None else self.sim.now
+            end_counted = min(self.sim.now, w_end)
+            live += max(0.0, end_counted - inv._slurm_start)
         return (self.pilot_time + live) / max(self.idle_time_total, 1e-9)

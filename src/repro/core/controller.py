@@ -4,6 +4,7 @@ states, and 503 when no invoker is healthy (paper Sec. II, III-C, III-E).
 """
 from __future__ import annotations
 
+import bisect
 from typing import Dict, List, Optional, TYPE_CHECKING
 
 from repro.core.events import Simulator
@@ -44,6 +45,17 @@ class Controller:
         self.completed: List[Request] = []
         self.rejected_503: List[Request] = []
         self.n_submitted = 0
+        # request-path metric handles, memoised per label set: the registry
+        # lookup (label sort + dict key build) is pure overhead at QPS scale
+        self._mcache: Dict[tuple, object] = {}
+
+    def _metric(self, kind: str, name: str, **labels):
+        key = (kind, name, tuple(sorted(labels.items())))
+        m = self._mcache.get(key)
+        if m is None:
+            m = getattr(self.metrics, kind)(name, **labels)
+            self._mcache[key] = m
+        return m
 
     @property
     def healthy_order(self) -> List[int]:
@@ -51,19 +63,25 @@ class Controller:
         return self._healthy_order
 
     # --- invoker lifecycle ------------------------------------------------
+    # _healthy_order is maintained incrementally: state changes only flow
+    # through register / mark_unavailable / deregister, so an O(log n) sorted
+    # insert/remove keeps it identical to re-sorting the healthy ids — without
+    # rescanning the invoker table on every lifecycle transition.
+    def _order_remove(self, inv_id: int):
+        i = bisect.bisect_left(self._healthy_order, inv_id)
+        if i < len(self._healthy_order) and self._healthy_order[i] == inv_id:
+            self._healthy_order.pop(i)
+
     def register(self, inv: "Invoker"):
         self.invokers[inv.id] = inv
         self.topics.setdefault(inv.id, Topic(f"invoker-{inv.id}"))
-        self._healthy_order = sorted(
-            i for i, v in self.invokers.items() if v.state == "healthy")
+        if inv.state == "healthy":
+            bisect.insort(self._healthy_order, inv.id)
         self.router.on_register(inv)
 
     def mark_unavailable(self, inv: "Invoker") -> int:
         """First SIGTERM action: no new requests; move unpulled to fast lane."""
-        if inv.id in self.invokers:
-            self._healthy_order = sorted(
-                i for i, v in self.invokers.items()
-                if v.state == "healthy" and i != inv.id)
+        self._order_remove(inv.id)
         moved = 0
         topic = self.topics.get(inv.id)
         if topic:
@@ -76,8 +94,7 @@ class Controller:
         topic = self.topics.pop(inv.id, None)
         if topic and len(topic):
             topic.drain_into(self.fast_lane)
-        self._healthy_order = sorted(
-            i for i, v in self.invokers.items() if v.state == "healthy")
+        self._order_remove(inv.id)
         self.router.on_deregister(inv)
         self._kick_all()
 
@@ -87,8 +104,8 @@ class Controller:
         admission control rejects it."""
         self.n_submitted += 1
         if self.metrics is not None:
-            self.metrics.counter("requests_total",
-                                 slo_class=req.slo_class).inc()
+            self._metric("counter", "requests_total",
+                         slo_class=req.slo_class).inc()
         # capacity check first: an outage must not drain admission buckets
         # (and must report as no_invoker, not throttled — the adaptive
         # supply manager keys its pressure signal on that distinction)
@@ -103,7 +120,8 @@ class Controller:
         if chosen is None or chosen not in self.topics:
             return self._reject(req, "no_invoker")
         self.topics[chosen].push(req)
-        self.sim.at(req.arrival + req.timeout, self._check_timeout, req)
+        req.timeout_ev = self.sim.at(req.arrival + req.timeout,
+                                     self._check_timeout, req)
         self.invokers[chosen].kick()
         return True
 
@@ -117,7 +135,7 @@ class Controller:
             self.admission.release(req)
         self.rejected_503.append(req)
         if self.metrics is not None:
-            self.metrics.counter("rejected_503_total", reason=reason).inc()
+            self._metric("counter", "rejected_503_total", reason=reason).inc()
         return False
 
     def requeue_fast(self, req: Request):
@@ -141,17 +159,28 @@ class Controller:
             self._on_terminal(req)
 
     def _on_terminal(self, req: Request):
+        # the pending self-timeout is dead weight once the outcome is known;
+        # cancelling it keeps the event heap proportional to in-flight work
+        if req.timeout_ev is not None:
+            self.sim.cancel(req.timeout_ev)
+            req.timeout_ev = None
         if self.admission is not None:
             self.admission.release(req)
         if self.metrics is not None:
-            self.metrics.counter("outcomes_total", outcome=req.outcome,
-                                 slo_class=req.slo_class).inc()
+            self._metric("counter", "outcomes_total", outcome=req.outcome,
+                         slo_class=req.slo_class).inc()
             if req.outcome == "success":
-                self.metrics.histogram("response_time_s",
-                                       slo_class=req.slo_class).observe(
+                self._metric("histogram", "response_time_s",
+                             slo_class=req.slo_class).observe(
                     req.response_time)
 
     def _kick_all(self):
+        # only the fast lane can hold work that any invoker may pull; an
+        # invoker's own backlog is consumed by the event that created it
+        # (submit kicks the chosen invoker, _finish kicks on freed capacity),
+        # so with an empty fast lane this fan-out would be 100% no-op kicks
+        if not self.fast_lane:
+            return
         for i in self._healthy_order:
             self.invokers[i].kick()
 

@@ -7,6 +7,7 @@ experiment is exactly reproducible from its seed.
 """
 from __future__ import annotations
 
+import bisect
 import heapq
 import itertools
 from typing import Callable, List, Optional, Tuple
@@ -26,7 +27,9 @@ class Event:
         self.cancelled = True
 
     def __lt__(self, other):  # heapq ordering: time, then insertion order
-        return (self.time, self.seq) < (other.time, other.seq)
+        if self.time != other.time:
+            return self.time < other.time
+        return self.seq < other.seq
 
 
 class Simulator:
@@ -34,6 +37,9 @@ class Simulator:
         self.now: float = 0.0
         self._heap: List[Event] = []
         self._seq = itertools.count()
+        self._front_seq = itertools.count(start=-1, step=-1)
+        self.n_processed = 0      # lifetime count of executed events
+        self._n_cancelled = 0     # cancelled events still sitting in the heap
 
     def at(self, time: float, fn: Callable, *args) -> Event:
         if time < self.now - 1e-9:
@@ -42,8 +48,33 @@ class Simulator:
         heapq.heappush(self._heap, ev)
         return ev
 
+    def at_front(self, time: float, fn: Callable, *args) -> Event:
+        """Schedule an event that, at equal times, fires BEFORE every normally
+        scheduled event (negative seq). Lets a component feed a pre-sorted
+        exogenous stream (e.g. trace windows) into the heap one event at a
+        time while keeping the tie order of scheduling them all upfront."""
+        if time < self.now - 1e-9:
+            raise ValueError(f"event in the past: {time} < {self.now}")
+        ev = Event(max(time, self.now), next(self._front_seq), fn, args)
+        heapq.heappush(self._heap, ev)
+        return ev
+
     def after(self, delay: float, fn: Callable, *args) -> Event:
         return self.at(self.now + delay, fn, *args)
+
+    def cancel(self, ev: Event):
+        """Cancel an event and keep the heap proportional to live work: once
+        most of the heap is dead weight, rebuild it without the cancelled
+        entries. (time, seq) is a total order, so the rebuild cannot change
+        the pop sequence of the surviving events."""
+        if ev.cancelled:
+            return
+        ev.cancel()
+        self._n_cancelled += 1
+        if self._n_cancelled > 64 and self._n_cancelled * 2 > len(self._heap):
+            self._heap = [e for e in self._heap if not e.cancelled]
+            heapq.heapify(self._heap)
+            self._n_cancelled = 0
 
     def run_until(self, t_end: float, max_events: Optional[int] = None) -> int:
         """Process events with time <= t_end. Returns #events processed."""
@@ -51,18 +82,25 @@ class Simulator:
         while self._heap and self._heap[0].time <= t_end:
             ev = heapq.heappop(self._heap)
             if ev.cancelled:
+                self._n_cancelled = max(0, self._n_cancelled - 1)
                 continue
             self.now = ev.time
+            # mark executed before running: a late cancel() of an event that
+            # already fired (e.g. a timeout callback reaching its own handle)
+            # must not count toward the heap's dead weight
+            ev.cancelled = True
             ev.fn(*ev.args)
             n += 1
             if max_events is not None and n >= max_events:
                 break
         self.now = max(self.now, t_end)
+        self.n_processed += n
         return n
 
     def peek(self) -> Optional[float]:
         while self._heap and self._heap[0].cancelled:
             heapq.heappop(self._heap)
+            self._n_cancelled = max(0, self._n_cancelled - 1)
         return self._heap[0].time if self._heap else None
 
 
@@ -80,13 +118,18 @@ class IntervalRecorder:
         return sum(e - s for s, e, t in self.intervals if t == tag)
 
     def timeline(self, t0: float, t1: float, step: float, tag: str) -> List[int]:
-        """Count of intervals with the tag active at each sample point."""
-        import bisect
-        starts = sorted((s, e) for s, e, t in self.intervals if t == tag)
+        """Count of intervals with the tag active at each sample point.
+
+        Active at ``t`` means ``start <= t < end``; with starts and ends each
+        sorted independently that count is ``#{start <= t} - #{end <= t}``,
+        so the whole timeline is O((n + samples) log n) instead of
+        O(samples * n)."""
+        starts = sorted(s for s, e, t in self.intervals if t == tag)
+        ends = sorted(e for s, e, t in self.intervals if t == tag)
         out = []
         t = t0
         while t <= t1:
-            c = sum(1 for s, e in starts if s <= t < e)
-            out.append(c)
+            out.append(bisect.bisect_right(starts, t)
+                       - bisect.bisect_right(ends, t))
             t += step
         return out

@@ -51,6 +51,7 @@ class Invoker:
         self.executor = executor        # maps request -> execution seconds
         self.on_exit = on_exit
         self.state = "warming"
+        self._registered = False    # True between register() and deregister()
         self.warm_fns: Dict[str, float] = {}   # fn -> last use (LRU)
         self.running: Set[int] = set()         # request ids in flight
         self._running_reqs: Dict[int, tuple] = {}  # id -> (req, end_event, t_end)
@@ -70,6 +71,7 @@ class Invoker:
             return
         self.state = "healthy"
         self.t_healthy = self.sim.now
+        self._registered = True
         self.controller.register(self)
         self.kick()
 
@@ -80,7 +82,7 @@ class Invoker:
             return
         was_warming = self.state == "warming"
         self.state = "draining"
-        self._deadline_ev.cancel()
+        self.sim.cancel(self._deadline_ev)
         if not was_warming:
             self.controller.mark_unavailable(self)
         # requeue running invocations that cannot finish within the grace
@@ -89,7 +91,7 @@ class Invoker:
             remaining = t_end - self.sim.now
             if remaining > self.grace - self.drain_margin:
                 if req.interruptible:
-                    ev.cancel()
+                    self.sim.cancel(ev)
                     del self._running_reqs[rid]
                     self.running.discard(rid)
                     self.controller.requeue_fast(req)
@@ -107,23 +109,36 @@ class Invoker:
         """Hard stop at the end of the grace period. Non-interruptible calls
         that are still running die here — the 'failed during execution'
         category of Sec. V-C."""
+        self._exit()
+
+    def _dispose_running(self):
+        """Terminal cleanup of whatever is still in flight: interruptible work
+        goes back through the fast lane, non-interruptible work dies with the
+        worker, and every pending _finish event is cancelled so a dead invoker
+        can never report a completion."""
         for rid in list(self._running_reqs):
             req, ev, _ = self._running_reqs.pop(rid)
-            ev.cancel()
+            self.sim.cancel(ev)
             self.running.discard(rid)
             if req.outcome is None:
                 if req.interruptible:
                     self.controller.requeue_fast(req)
                 else:
                     self.controller.complete(req, "failed")
-        self._exit()
 
     def _exit(self):
         if self.state == "dead":
             return
+        # the self-timeout drain path can leave non-interruptible calls whose
+        # remaining time exceeds the grace still "running" here; they must be
+        # disposed of exactly like a SIGKILL or their _finish events would
+        # later fire success from a dead worker (zombie completions)
+        self._dispose_running()
         self.state = "dead"
         self.t_dead = self.sim.now
-        self.controller.deregister(self)
+        if self._registered:
+            self._registered = False
+            self.controller.deregister(self)
         if self.on_exit:
             self.on_exit(self)
 

@@ -27,6 +27,10 @@ class Request:
     reject_reason: str = ""         # on 503: no_invoker | throttled:* | ...
     t_invoked: Optional[float] = None
     t_completed: Optional[float] = None
+    # live handle on the controller's pending _check_timeout event, cancelled
+    # when the request reaches a terminal outcome (heap hygiene)
+    timeout_ev: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def response_time(self) -> Optional[float]:
@@ -36,7 +40,12 @@ class Request:
 
 
 class Topic:
-    """FIFO queue standing in for a Kafka topic."""
+    """FIFO queue standing in for a Kafka topic.
+
+    Requests that reached a terminal outcome while still queued (e.g. timed
+    out waiting) are dropped lazily: consumers skip them on ``pop``, and
+    ``push`` sheds any dead head, so an unconsumed topic cannot accumulate an
+    unbounded tail of already-decided requests during an outage."""
 
     def __init__(self, name: str):
         self.name = name
@@ -44,19 +53,31 @@ class Topic:
 
     def push(self, req: Request):
         self._q.append(req)
+        q = self._q
+        while q and q[0].outcome is not None:
+            q.popleft()
 
     def push_front(self, req: Request):
         self._q.appendleft(req)
 
     def pop(self) -> Optional[Request]:
-        return self._q.popleft() if self._q else None
+        q = self._q
+        while q:
+            req = q.popleft()
+            if req.outcome is None:
+                return req
+        return None
 
     def drain_into(self, other: "Topic") -> int:
-        """Move every message to another topic (SIGTERM hand-off). FIFO order
-        is preserved; returns the number of messages moved."""
-        n = len(self._q)
+        """Move every live message to another topic (SIGTERM hand-off); FIFO
+        order is preserved, terminal messages are dropped. Returns the number
+        of messages moved."""
+        n = 0
         while self._q:
-            other.push(self._q.popleft())
+            req = self._q.popleft()
+            if req.outcome is None:
+                other.push(req)
+                n += 1
         return n
 
     def __len__(self):

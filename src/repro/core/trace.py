@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import heapq
 import math
 from typing import List, Sequence
 
@@ -144,7 +145,15 @@ def _generate_once(cfg: TraceConfig, lam_scale: float, full_scale: float) -> Lis
     windows: List[IdleWindow] = []
     t = 0.0
     lam_max = 2.5 * lam
-    node_free_at = np.zeros(cfg.n_nodes)
+    # nodes currently inside an idle window ("busy" for placement purposes):
+    # node -> window end, with an expiry heap. Arrival times only move
+    # forward, so expiring busy nodes as t advances reproduces exactly the
+    # historical full-array `node_free_at <= t` candidate set — at O(#idle)
+    # per arrival instead of O(n_nodes) — and the k-th-free-id walk below
+    # consumes the same RNG draw over the same candidate count, keeping
+    # generated traces bit-identical.
+    busy = {}
+    expiry: List[tuple] = []
     while True:
         t += float(rng.exponential(1.0 / lam_max))
         if t >= cfg.horizon:
@@ -160,11 +169,17 @@ def _generate_once(cfg: TraceConfig, lam_scale: float, full_scale: float) -> Lis
         if end - t < 1.0:
             continue
         # pick a node currently not idle (windows on one node cannot overlap)
-        candidates = np.flatnonzero(node_free_at <= t)
-        if len(candidates) == 0:
+        while expiry and expiry[0][0] <= t:
+            busy.pop(heapq.heappop(expiry)[1], None)
+        n_free = cfg.n_nodes - len(busy)
+        if n_free == 0:
             continue
-        node = int(candidates[rng.integers(len(candidates))])
-        node_free_at[node] = end
+        node = int(rng.integers(n_free))
+        for b in sorted(busy):          # k-th free id, skipping busy holes
+            if b <= node:
+                node += 1
+        busy[node] = end
+        heapq.heappush(expiry, (end, node))
         slack = math.exp(rng.uniform(math.log(cfg.slack_lo), math.log(cfg.slack_hi)))
         predicted = t + (end - t) * slack
         windows.append(IdleWindow(node=node, start=t, end=end, predicted_end=predicted))

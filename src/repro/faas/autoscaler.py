@@ -149,11 +149,14 @@ class AdaptiveJobManager:
             if have < want:
                 new.extend(PilotJob(length_s=ell) for _ in range(want - have))
             elif have > want:
+                # cancel the oldest queued jobs of this length (FIFO head);
+                # the bucketed queue iterates one length without a full scan
                 drop = have - want
-                for j in self.slurm.queue:
-                    if j.length_s == ell and drop > 0:
-                        surplus.append(j)
-                        drop -= 1
+                for j in self.slurm.iter_queued(ell):
+                    surplus.append(j)
+                    drop -= 1
+                    if drop == 0:
+                        break
         if surplus:
             self.n_cancelled += self.slurm.cancel_queued(surplus)
             if self.metrics is not None:

@@ -169,11 +169,12 @@ class Platform:
         return cls(scenario, **overrides)
 
     def _count_workers(self, state: str) -> int:
-        # one pass over all_invokers per sim timestamp, shared by the three
-        # state gauges the sampler scrapes together
+        # one pass over the LIVE invokers per sim timestamp, shared by the
+        # three state gauges the sampler scrapes together — dead invokers are
+        # pruned from the registry, so this never rescans the day's history
         if self._wc_time != self.sim.now:
             counts = {s: 0 for s in WORKER_STATES}
-            for inv in self.slurm.all_invokers:
+            for inv in self.slurm.live_invokers.values():
                 if inv.state in counts:
                     counts[inv.state] += 1
             self._wc, self._wc_time = counts, self.sim.now

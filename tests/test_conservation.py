@@ -1,0 +1,160 @@
+"""Request-lifecycle conservation: every submitted request ends in exactly one
+terminal outcome, never assigned by a dead worker.
+
+The deterministic zombie test pins the self-timeout drain bug: before the fix,
+an invoker that drained past its grace left non-interruptible requests
+running, ``_exit``-ed, and their still-scheduled ``_finish`` events later
+fired ``complete(req, "success")`` from a dead worker."""
+import numpy as np
+import pytest
+
+from repro.core import Controller, Invoker, Request, Simulator
+from repro.core.routing import HashRouter
+from repro.core.trace import IdleWindow
+from repro.platform import (Platform, ScenarioConfig, SchedulingSection,
+                            WorkloadSection)
+
+TERMINAL = {"success", "timeout", "failed", "503"}
+
+
+@pytest.fixture
+def zombie_guard(monkeypatch):
+    """Record any _finish fired by an already-dead invoker."""
+    violations = []
+    orig = Invoker._finish
+
+    def checked(self, req):
+        if self.state == "dead":
+            violations.append((req.id, self.id, self.sim.now, self.t_dead))
+        orig(self, req)
+
+    monkeypatch.setattr(Invoker, "_finish", checked)
+    return violations
+
+
+# --- the zombie-success bug, pinned deterministically --------------------------
+def test_self_timeout_drain_cannot_complete_after_death(zombie_guard):
+    """Non-interruptible request outlasting grace - drain_margin on the
+    SIGTERM("timeout") path: the worker exits at now + grace and the request
+    must die with it — not report success from beyond t_dead."""
+    sim = Simulator()
+    ctrl = Controller(sim)
+    rng = np.random.default_rng(1)
+    inv = Invoker(sim, ctrl, node=0, sched_end=300.0, rng=rng, grace=180.0)
+    sim.run_until(60.0)
+    assert ctrl.healthy_count() == 1
+    req = Request(fn="f", exec_time=500.0, arrival=sim.now, timeout=2000.0,
+                  interruptible=False)
+    assert ctrl.submit(req)
+    sim.run_until(100.0)
+    assert req.id in inv._running_reqs
+    # deadline SIGTERM fires at sched_end - drain_margin = 285; the request's
+    # remaining time exceeds the grace, so the invoker exits at 285 + 180
+    sim.run_until(2000.0)
+    assert inv.state == "dead"
+    assert zombie_guard == []
+    assert req.outcome == "failed"          # pre-fix: zombie "success"
+    assert req.t_completed is not None and req.t_completed <= inv.t_dead
+
+
+def test_eviction_grace_overrun_fails_at_sigkill(zombie_guard):
+    """Same invariant on the eviction path: _exit at now + grace disposes the
+    long non-interruptible call instead of leaving its _finish scheduled."""
+    sim = Simulator()
+    ctrl = Controller(sim)
+    rng = np.random.default_rng(2)
+    inv = Invoker(sim, ctrl, node=0, sched_end=4000.0, rng=rng, grace=180.0)
+    sim.run_until(60.0)
+    req = Request(fn="g", exec_time=400.0, arrival=sim.now, timeout=3600.0,
+                  interruptible=False)
+    assert ctrl.submit(req)
+    sim.run_until(70.0)
+    inv.sigterm("evict")
+    sim.after(180.0, inv.sigkill)
+    sim.run_until(3600.0)
+    assert inv.state == "dead"
+    assert zombie_guard == []
+    assert req.outcome == "failed"
+    assert req.t_completed <= inv.t_dead
+
+
+# --- register/deregister symmetry ----------------------------------------------
+def test_warming_death_never_reaches_router_deregister():
+    """An invoker killed while still warming was never register()-ed; routers
+    must not see a deregister without the matching register."""
+    events = []
+
+    class RecordingRouter(HashRouter):
+        def on_register(self, inv):
+            events.append(("register", inv.id))
+
+        def on_deregister(self, inv):
+            events.append(("deregister", inv.id))
+
+    sim = Simulator()
+    ctrl = Controller(sim, router=RecordingRouter())
+    rng = np.random.default_rng(0)
+    inv = Invoker(sim, ctrl, node=0, sched_end=4000.0, rng=rng)
+    assert inv.state == "warming"
+    inv.sigterm("evict")                    # dies before ever becoming healthy
+    sim.run_until(300.0)
+    assert inv.state == "dead"
+    assert events == []
+    # and a normal lifecycle stays symmetric
+    inv2 = Invoker(sim, ctrl, node=1, sched_end=sim.now + 4000.0, rng=rng)
+    sim.run_until(sim.now + 60.0)
+    inv2.sigterm("evict")
+    sim.run_until(sim.now + 300.0)
+    assert events == [("register", inv2.id), ("deregister", inv2.id)]
+
+
+# --- scenario-level conservation -----------------------------------------------
+def _eviction_heavy_windows():
+    """Backfill plans that overshoot badly: every window evicts its pilot."""
+    out = []
+    for node in range(4):
+        for k in range(4):
+            start = 10.0 + node * 3.0 + k * 700.0
+            out.append(IdleWindow(node=node, start=start, end=start + 450.0,
+                                  predicted_end=start + 1400.0))
+    return out
+
+
+def _run_scenario(case: str):
+    if case == "admission":
+        sc = ScenarioConfig.multi_tenant_burst(duration=1800.0,
+                                               scaler="adaptive")
+        return Platform.build(sc).run()
+    if case == "eviction":
+        sc = ScenarioConfig(
+            duration=2400.0, seed=7,
+            workload=WorkloadSection(qps=3.0, exec_time=200.0, timeout=600.0,
+                                     non_interruptible_share=0.6),
+            scheduling=SchedulingSection(model="fib"))
+        return Platform.build(sc, windows=_eviction_heavy_windows()).run()
+    sc = ScenarioConfig(
+        duration=1800.0, seed=11,
+        workload=WorkloadSection(qps=4.0, exec_time=20.0, timeout=120.0,
+                                 non_interruptible_share=0.5),
+        scheduling=SchedulingSection(model=case))
+    return Platform.build(sc).run()
+
+
+@pytest.mark.parametrize("case", ["fib", "var", "eviction", "admission"])
+def test_every_request_has_exactly_one_terminal_outcome(case, zombie_guard):
+    res = _run_scenario(case)
+    assert res.n_submitted > 0
+    assert zombie_guard == [], "completion fired from a dead worker"
+    for r in res.requests:
+        assert r.outcome in TERMINAL, r
+    # outcome_counts totals must account for every submitted request exactly
+    # once: completed + rejected partitions the submitted set
+    assert sum(res.outcome_counts.values()) == res.n_submitted
+    assert res.n_submitted == len(res.requests)
+
+
+@pytest.mark.parametrize("case", ["eviction"])
+def test_evictions_actually_exercised(case):
+    res = _run_scenario(case)
+    assert res.n_evicted > 0
+    assert res.outcome_counts.get("failed", 0) > 0   # grace overruns died

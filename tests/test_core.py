@@ -156,13 +156,16 @@ def test_prime_jobs_never_delayed_beyond_grace():
     tc = TraceConfig(horizon=4 * HOUR, seed=5)
     rt = HarvestRuntime(cfg, trace_cfg=tc)
     res = rt.run()
-    for inv in rt.slurm.all_invokers:
-        node_windows = [w for w in rt.windows if w.node == inv.node
-                        and w.start <= inv.t_created]
-        if not node_windows or inv.t_dead is None:
+    assert rt.slurm.exit_log, "no invoker ever exited"
+    for node, t_created, t_dead in rt.slurm.exit_log:
+        node_windows = [w for w in rt.windows if w.node == node
+                        and w.start <= t_created]
+        if not node_windows:
             continue
         w = max(node_windows, key=lambda x: x.start)
-        assert inv.t_dead <= w.end + cfg.grace + 1e-6
+        assert t_dead <= w.end + cfg.grace + 1e-6
+    # the registry holds live invokers only — every exited one is pruned
+    assert all(inv.state != "dead" for inv in rt.slurm.live_invokers.values())
 
 
 # --- Alg. 1 wrapper -------------------------------------------------------------------

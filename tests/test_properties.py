@@ -75,6 +75,51 @@ def test_topic_drain_conserves_messages(n):
 
 
 # --- request conservation through eviction storms -----------------------------------------
+@given(seed=st.integers(min_value=0, max_value=2**16),
+       qps=st.floats(min_value=0.5, max_value=6.0),
+       exec_time=st.floats(min_value=0.01, max_value=300.0),
+       non_int=st.floats(min_value=0.0, max_value=1.0),
+       model=st.sampled_from(["fib", "var"]))
+@settings(max_examples=20, deadline=None)
+def test_request_conservation_fuzz(seed, qps, exec_time, non_int, model):
+    """Whatever the workload shape, supply model, and eviction timing: every
+    submitted request ends in exactly one terminal outcome and no completion
+    fires from a dead worker (see tests/test_conservation.py for the
+    deterministic pins)."""
+    from repro.core.invoker import Invoker
+    from repro.core.trace import IdleWindow
+    from repro.platform import (Platform, ScenarioConfig, SchedulingSection,
+                                WorkloadSection)
+    windows = [IdleWindow(node=n, start=10.0 + 3.0 * n + 700.0 * k,
+                          end=10.0 + 3.0 * n + 700.0 * k + 450.0,
+                          predicted_end=10.0 + 3.0 * n + 700.0 * k + 1400.0)
+               for n in range(3) for k in range(3)]
+    sc = ScenarioConfig(
+        duration=1800.0, seed=seed,
+        workload=WorkloadSection(qps=qps, exec_time=exec_time, timeout=400.0,
+                                 non_interruptible_share=non_int),
+        scheduling=SchedulingSection(model=model))
+    p = Platform.build(sc, windows=windows)
+    # terminal means terminal: no _finish may ever fire on a dead worker
+    zombies = []
+    orig_finish = Invoker._finish
+
+    def checked_finish(self, req):
+        if self.state == "dead":
+            zombies.append((req.id, self.id))
+        orig_finish(self, req)
+
+    Invoker._finish = checked_finish
+    try:
+        res = p.run()
+    finally:
+        Invoker._finish = orig_finish
+    assert zombies == []
+    assert all(r.outcome in ("success", "timeout", "failed", "503")
+               for r in res.requests)
+    assert sum(res.outcome_counts.values()) == res.n_submitted
+
+
 @given(n_reqs=st.integers(min_value=1, max_value=60),
        evict_at=st.floats(min_value=30.0, max_value=120.0),
        seed=st.integers(min_value=0, max_value=2**16))

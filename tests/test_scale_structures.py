@@ -1,0 +1,141 @@
+"""Unit tests for the cluster-scale data structures: the length-bucketed
+pilot queue, the vacancy index, lazy terminal-request shedding in topics,
+timeout-event cancellation/heap compaction, and the bisect IntervalRecorder."""
+import numpy as np
+import pytest
+
+from repro.core import Controller, Invoker, PilotJob, Request, Simulator, Topic
+from repro.core.cluster import SlurmSim
+from repro.core.events import IntervalRecorder
+from repro.core.trace import IdleWindow
+
+
+def _slurm(windows=()):
+    sim = Simulator()
+    ctrl = Controller(sim)
+    return sim, ctrl, SlurmSim(sim, list(windows), ctrl,
+                               np.random.default_rng(0))
+
+
+# --- length-bucketed job queue --------------------------------------------------
+def test_bucketed_queue_picks_longest_fit_fifo():
+    sim, ctrl, slurm = _slurm()
+    jobs = [PilotJob(length_s=240.0), PilotJob(length_s=480.0),
+            PilotJob(length_s=240.0), PilotJob(length_s=None)]
+    slurm.submit_jobs(jobs)
+    assert slurm.queued_counts() == {240.0: 2, 480.0: 1, None: 1}
+    assert slurm._pick_job(500.0) is jobs[1]    # longest fitting length
+    assert slurm._pick_job(300.0) is jobs[0]    # FIFO within a length
+    assert slurm._pick_job(130.0) is jobs[3]    # only var fits (time_min 120)
+    assert slurm._pick_job(60.0) is None
+
+    slurm._take_job(jobs[1])
+    assert slurm._pick_job(500.0) is jobs[0]    # 480-bucket now empty
+    assert slurm.queued_counts() == {240.0: 2, None: 1}
+
+
+def test_cancel_queued_is_lazy_and_idempotent():
+    sim, ctrl, slurm = _slurm()
+    jobs = [PilotJob(length_s=240.0) for _ in range(3)]
+    slurm.submit_jobs(jobs)
+    assert slurm.cancel_queued([jobs[0], jobs[2]]) == 2
+    assert jobs[0].state == jobs[2].state == "cancelled"
+    assert slurm.queued_counts() == {240.0: 1}
+    # cancelled heads are shed transparently; the pick lands on the survivor
+    assert slurm._pick_job(300.0) is jobs[1]
+    assert slurm.cancel_queued([jobs[0]]) == 0       # already gone
+    assert list(slurm.iter_queued(240.0)) == [jobs[1]]
+
+
+def test_var_jobs_respect_time_min_in_fifo_order():
+    sim, ctrl, slurm = _slurm()
+    big = PilotJob(length_s=None, time_min_s=600.0)
+    small = PilotJob(length_s=None, time_min_s=120.0)
+    slurm.submit_jobs([big, small])
+    # first FIFO var whose time_min fits — skips (without dropping) `big`
+    assert slurm._pick_job(300.0) is small
+    slurm._take_job(small)
+    assert list(slurm.iter_queued(None)) == [big]
+
+
+# --- vacancy index --------------------------------------------------------------
+def test_vacancy_index_tracks_idle_invoker_free_nodes():
+    windows = [IdleWindow(node=0, start=10.0, end=910.0, predicted_end=900.0),
+               IdleWindow(node=1, start=20.0, end=80.0, predicted_end=60.0),
+               IdleWindow(node=0, start=1000.0, end=1300.0,
+                          predicted_end=1350.0)]
+    sim, ctrl, slurm = _slurm(windows)
+
+    def invariant():
+        expect = {n for n, st in slurm.nodes.items()
+                  if st.window is not None and st.invoker is None}
+        assert slurm._vacant == expect
+
+    slurm.submit_jobs([PilotJob(length_s=240.0)])
+    for t in (5.0, 15.0, 30.0, 100.0, 950.0, 1100.0, 1400.0):
+        sim.run_until(t)
+        invariant()
+    assert slurm.n_started >= 1
+    # live registry prunes exited invokers; aggregates keep the totals
+    assert all(i.state != "dead" for i in slurm.live_invokers.values())
+    assert slurm.n_exited + len(slurm.live_invokers) == slurm.n_started
+
+
+# --- topics shed terminal requests ----------------------------------------------
+def test_topic_drops_terminal_requests_lazily():
+    t = Topic("t")
+    reqs = [Request(fn=f"f{i}", exec_time=0.01, arrival=0.0)
+            for i in range(4)]
+    for r in reqs:
+        t.push(r)
+    reqs[0].outcome = "timeout"
+    reqs[1].outcome = "timeout"
+    assert t.pop() is reqs[2]                # dead heads skipped
+    reqs[3].outcome = "503"
+    assert t.pop() is None
+    live = Request(fn="x", exec_time=0.01, arrival=0.0)
+    t.push(live)
+    other = Topic("o")
+    assert t.drain_into(other) == 1          # only the live one moves
+    assert other.pop() is live
+
+
+# --- timeout events are cancelled on terminal outcomes --------------------------
+def test_event_heap_stays_proportional_to_inflight_work():
+    sim = Simulator()
+    ctrl = Controller(sim)
+    rng = np.random.default_rng(0)
+    Invoker(sim, ctrl, node=0, sched_end=40000.0, rng=rng)
+    sim.run_until(40.0)
+    for i in range(500):
+        assert ctrl.submit(Request(fn=f"f{i}", exec_time=0.001,
+                                   arrival=sim.now, timeout=3600.0))
+        sim.run_until(sim.now + 1.0)
+    assert all(r.outcome == "success" for r in ctrl.completed)
+    # 500 hour-long timeouts were scheduled; all are terminal, so the heap
+    # must not be parked with them until they expire
+    live = sum(1 for e in sim._heap if not e.cancelled)
+    assert live < 20, live
+
+
+def test_simulator_cancel_compacts_heap():
+    sim = Simulator()
+    evs = [sim.at(1000.0 + i, lambda: None) for i in range(200)]
+    for ev in evs[:150]:
+        sim.cancel(ev)
+    assert len(sim._heap) <= 100             # compaction dropped dead weight
+    sim.run_until(2000.0)
+    assert sim.n_processed == 50             # survivors all fired
+
+
+# --- IntervalRecorder timeline (bisect rewrite) ---------------------------------
+def test_interval_timeline_counts_overlapping_intervals():
+    rec = IntervalRecorder()
+    rec.add(0.0, 10.0, "a")
+    rec.add(5.0, 15.0, "a")
+    rec.add(5.0, 7.0, "b")                   # other tag: ignored
+    rec.add(20.0, 30.0, "a")
+    assert rec.timeline(0.0, 30.0, 5.0, "a") == [1, 2, 1, 0, 1, 1, 0]
+    assert rec.timeline(0.0, 30.0, 5.0, "b") == [0, 1, 0, 0, 0, 0, 0]
+    assert rec.total("a") == 30.0
+    assert rec.timeline(0.0, 10.0, 2.5, "missing") == [0, 0, 0, 0, 0]
