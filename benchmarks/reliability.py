@@ -1,0 +1,150 @@
+"""Reliability-under-preemption grid: no-retry vs retry vs retry plus
+deadline-aware placement, on the two preemption-heavy scenario days.
+
+Each cell swaps only the scenario's ``reliability.policy`` and
+``platform.router`` fields (same trace, workload, supply model), so the
+deltas isolate the two reliability levers:
+
+  - ``none``            — the paper's semantics: a request caught in the
+                          drain/SIGKILL window "failed during execution"
+                          (Sec. V-C) and stays failed.
+  - ``retry``           — budgeted retries with exponential backoff absorb
+                          preemption deaths and re-place the work.
+  - ``retry+deadline``  — retries plus rFaaS-style lease-aware placement:
+                          the router avoids invokers whose remaining
+                          scheduled lifetime cannot cover the request, so
+                          fewer attempts die in the first place.
+
+Reported per cell: goodput (successful request-seconds — the optimisation
+target), failure/lost/timeout counts, retry amplification, wasted work
+(seconds of execution thrown away), and p50/p95 latency. Writes
+``results/BENCH_reliability.json`` when invoked as a script.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Tuple
+
+from repro.platform import Platform, ScenarioConfig, nan_to_none
+
+HOUR = 3600.0
+Row = Tuple[str, float, str]
+
+PRESETS = ("preemption_storm", "churn_day")
+CELLS = (
+    ("none", "none", "hash"),
+    ("retry", "retry", "hash"),
+    ("retry_deadline", "retry", "deadline-aware"),
+)
+
+
+def run_reliability_cell(preset: str, policy: str, router: str,
+                         duration: float, seed: int = 5) -> Dict:
+    sc = getattr(ScenarioConfig, preset)(duration=duration)
+    sc.seed = seed
+    sc.reliability.policy = policy
+    sc.platform.router = router
+    t0 = time.perf_counter()
+    res = Platform.build(sc).run()
+    wall = time.perf_counter() - t0
+    oc = res.outcome_counts
+    rel = res.reliability or {}
+    return {
+        "wall_s": wall,
+        "n_submitted": res.n_submitted,
+        "goodput_s": res.goodput_s,
+        "n_success": oc.get("success", 0),
+        "n_failed": oc.get("failed", 0),
+        "n_lost": oc.get("lost", 0),
+        "n_timeout": oc.get("timeout", 0),
+        "n_503": oc.get("503", 0),
+        "n_evicted": res.n_evicted,
+        "n_wasted_execs": res.n_wasted_execs,
+        "p50_s": nan_to_none(res.response_p50),
+        "p95_s": nan_to_none(res.response_p95),
+        "retries": rel.get("retries", 0.0),
+        "hedges": rel.get("hedges", 0.0),
+        "amplification": rel.get("amplification"),
+        # per-reason wasted seconds exist only when the reliability layer is
+        # observing dispatches; None (not 0.0) when the policy is "none" —
+        # those cells still waste work, it just is not measured in seconds
+        "wasted_work_s": (rel.get("wasted_s", 0.0)
+                          if res.reliability is not None else None),
+    }
+
+
+def _fmt(x) -> str:
+    return "n/a" if nan_to_none(x) is None else f"{x:.3f}"
+
+
+def bench_reliability(duration: float = 2 * HOUR) -> Tuple[List[Row], Dict]:
+    rows: List[Row] = []
+    detail: Dict[str, Dict] = {}
+    for preset in PRESETS:
+        for name, policy, router in CELLS:
+            cell = run_reliability_cell(preset, policy, router, duration)
+            detail[f"{preset}_{name}"] = cell
+            us = cell["wall_s"] * 1e6 / max(cell["n_submitted"], 1)
+            wasted = ("n/a" if cell["wasted_work_s"] is None
+                      else f"{cell['wasted_work_s']:.0f}")
+            rows.append((
+                f"reliability_{preset}_{name}", us,
+                f"goodput_s={cell['goodput_s']:.0f};"
+                f"failed={cell['n_failed']};lost={cell['n_lost']};"
+                f"timeouts={cell['n_timeout']};"
+                f"retries={cell['retries']:.0f};"
+                f"wasted_work_s={wasted};"
+                f"p95_s={_fmt(cell['p95_s'])}"))
+        base = detail[f"{preset}_none"]
+        for name in ("retry", "retry_deadline"):
+            c = detail[f"{preset}_{name}"]
+            gain = c["goodput_s"] - base["goodput_s"]
+            # the none cell has no seconds-level waste measurement to diff
+            # against; wasted-exec *counts* are policy-independent
+            rows.append((
+                f"reliability_{preset}_{name}_vs_none", 0.0,
+                f"d_goodput_s={gain:+.0f};"
+                f"d_failed={c['n_failed'] + c['n_lost'] - base['n_failed'] - base['n_lost']:+d};"
+                f"d_wasted_execs={c['n_wasted_execs'] - base['n_wasted_execs']:+d}"))
+    return rows, {"reliability": detail}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="a few sim-minutes per cell (CI execution check)")
+    ap.add_argument("--duration", type=float, default=None,
+                    help="sim-seconds per cell (default 2 h; --smoke wins)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: the committed "
+                         "results/BENCH_reliability.json; --smoke writes "
+                         "results/BENCH_reliability_smoke.json so a CI-speed "
+                         "run never clobbers the committed 2 h grid)")
+    args = ap.parse_args()
+    duration = 10 * 60.0 if args.smoke else (args.duration or 2 * HOUR)
+    out = args.out or ("results/BENCH_reliability_smoke.json" if args.smoke
+                       else "results/BENCH_reliability.json")
+    rows, detail = bench_reliability(duration)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    payload = {"duration_s": duration, **detail["reliability"]}
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    # the reliability layer must pay for itself where it matters: fail loudly
+    # if retry + deadline-aware placement ever stops beating no-retry goodput
+    # on the storm day (the PR-4 acceptance invariant)
+    base = detail["reliability"]["preemption_storm_none"]["goodput_s"]
+    best = detail["reliability"]["preemption_storm_retry_deadline"]["goodput_s"]
+    if best <= base:
+        raise SystemExit(
+            f"reliability regression: retry+deadline goodput {best:.0f}s "
+            f"<= no-retry {base:.0f}s on preemption_storm")
+
+
+if __name__ == "__main__":
+    main()

@@ -66,6 +66,7 @@ def main() -> None:
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
     from benchmarks import multi_tenant as MT
     from benchmarks import paper_benches as PB
+    from benchmarks import reliability as RL
     from benchmarks import routing as RT
 
     if args.smoke:
@@ -84,6 +85,7 @@ def main() -> None:
         "fig7": lambda: PB.bench_fig7_single_invocation(fig7_iters),
         "multitenant": lambda: MT.bench_multi_tenant(grid),
         "routing": lambda: RT.bench_routing(grid),
+        "reliability": lambda: RL.bench_reliability(grid),
         "roofline": bench_roofline_summary,
     }
     if args.list:

@@ -103,6 +103,7 @@ class SlurmSim:
         self.live_invokers: Dict[int, Invoker] = {}
         self.n_exited = 0
         self.exited_executed = 0      # sum of n_executed over exited invokers
+        self.exited_wasted = 0        # sum of n_wasted over exited invokers
         self.exited_warm_fns = 0      # sum of warm-container sets at exit
         self.exit_log: List[Tuple[int, float, float]] = []  # (node, t_created, t_dead)
         # accounting
@@ -303,7 +304,10 @@ class SlurmSim:
         self.live_invokers.pop(inv.id, None)
         self.n_exited += 1
         self.exited_executed += inv.n_executed
-        if inv.n_executed:      # warm sets on idle invokers are not "warm"
+        self.exited_wasted += inv.n_wasted
+        # warm sets on idle invokers are not "warm"; wasted executions still
+        # occupied containers, so they count toward having run work
+        if inv.n_executed or inv.n_wasted:
             self.exited_warm_fns += len(inv.warm_fns)
         self.exit_log.append((inv.node, inv.t_created, self.sim.now))
         node = getattr(inv, "_slurm_node", None)
@@ -358,16 +362,23 @@ class SlurmSim:
         return dict(self._counts)
 
     def total_executed(self) -> int:
-        """Requests executed across the whole day (exited + live invokers)."""
+        """Useful executions across the whole day (exited + live invokers)."""
         return self.exited_executed + sum(
             inv.n_executed for inv in self.live_invokers.values())
 
+    def total_wasted(self) -> int:
+        """Wasted executions across the whole day: completions of
+        already-decided requests plus work killed mid-flight."""
+        return self.exited_wasted + sum(
+            inv.n_wasted for inv in self.live_invokers.values())
+
     def total_warm_fns(self) -> int:
         """Warm-container sets summed over exited + live invokers (counting,
-        like the exited-side aggregate, only invokers that executed work)."""
+        like the exited-side aggregate, only invokers that executed work —
+        useful or wasted)."""
         return self.exited_warm_fns + sum(
             len(inv.warm_fns) for inv in self.live_invokers.values()
-            if inv.n_executed)
+            if inv.n_executed or inv.n_wasted)
 
     def coverage(self) -> float:
         """Share of idle surface covered by running pilot jobs (Slurm-level)."""

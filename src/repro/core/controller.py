@@ -30,7 +30,7 @@ class Controller:
     """
 
     def __init__(self, sim: Simulator, queue_depth_soft_limit: int = 64,
-                 admission=None, metrics=None, router=None):
+                 admission=None, metrics=None, router=None, reliability=None):
         self.sim = sim
         self.fast_lane = Topic("fast-lane")
         self.topics: Dict[int, Topic] = {}
@@ -39,9 +39,16 @@ class Controller:
         self.queue_depth_soft_limit = queue_depth_soft_limit
         self.router = router if router is not None else HashRouter()
         # optional platform-layer plugins (repro.faas): SLO-aware admission
-        # control in front of routing, and a metrics registry to publish into
+        # control in front of routing, a metrics registry to publish into,
+        # and a reliability policy (retry/hedging under preemption) that may
+        # absorb would-be-terminal outcomes and re-place the work
         self.admission = admission
         self.metrics = metrics
+        self.reliability = reliability
+        if reliability is not None:
+            # the policy needs the controller for resubmission; wiring it
+            # here keeps construction one step (bind is idempotent)
+            reliability.bind(self)
         self.completed: List[Request] = []
         self.rejected_503: List[Request] = []
         self.n_submitted = 0
@@ -145,18 +152,61 @@ class Controller:
         self.fast_lane.push(req)
         self._kick_all()
 
+    def resubmit(self, req: Request) -> bool:
+        """Reliability-layer re-entry: place an absorbed (retried or hedged)
+        request again. Bypasses admission — the request still holds its
+        original in-flight slot — and does not count as a new submission."""
+        if req.outcome is not None:
+            return False
+        chosen = self.router.route(req, self)
+        if chosen is None or chosen not in self.topics:
+            return False
+        if req.id in self.invokers[chosen].running:
+            # the router picked the worker already executing this request (a
+            # hash router homes the hedge twin): no second execution would
+            # start, so report the placement as failed rather than let the
+            # caller count a phantom attempt
+            return False
+        req.attempts += 1
+        self.topics[chosen].push(req)
+        self.invokers[chosen].kick()
+        return True
+
     def complete(self, req: Request, outcome: str = "success"):
-        if req.outcome is None:
-            req.outcome = outcome
-            req.t_completed = self.sim.now
-            self.completed.append(req)
-            self._on_terminal(req)
+        if req.outcome is not None:
+            return
+        # retry hook: the reliability policy may absorb a would-be-terminal
+        # failure (preemption death) and schedule another attempt instead of
+        # letting the outcome commit — the request stays logically in flight
+        # (admission slot held, timeout event still armed as the backstop)
+        if (self.reliability is not None
+                and self.reliability.absorb(req, outcome)):
+            return
+        req.outcome = outcome
+        req.t_completed = self.sim.now
+        self.completed.append(req)
+        self._on_terminal(req)
 
     def _check_timeout(self, req: Request):
         if req.outcome is None:
             req.outcome = "timeout"
             self.completed.append(req)
             self._on_terminal(req)
+
+    # --- dispatch observation (reliability bookkeeping) -------------------
+    def note_dispatch(self, req: Request, inv: "Invoker"):
+        """An invoker started executing ``req`` (hedge timers key off this)."""
+        if self.reliability is not None:
+            self.reliability.on_dispatch(req, inv)
+
+    def note_undispatch(self, req: Request, inv: "Invoker", elapsed: float,
+                        reason: str):
+        """``req`` left ``inv``'s in-flight set; ``elapsed`` seconds of
+        execution are attributable to ``reason`` (requeue | preempt_kill |
+        stale_finish | finish | duplicate_drop — hedge losers bypass this
+        hook via ``Invoker.cancel_running``)."""
+        if self.reliability is not None:
+            self.reliability.on_undispatch(req, inv, elapsed, reason)
 
     def _on_terminal(self, req: Request):
         # the pending self-timeout is dead weight once the outcome is known;
@@ -166,6 +216,8 @@ class Controller:
             req.timeout_ev = None
         if self.admission is not None:
             self.admission.release(req)
+        if self.reliability is not None:
+            self.reliability.on_terminal(req)
         if self.metrics is not None:
             self._metric("counter", "outcomes_total", outcome=req.outcome,
                          slo_class=req.slo_class).inc()

@@ -90,14 +90,17 @@ def simulate_coverage(windows: Sequence[IdleWindow], job_lengths_min: Sequence[i
         events.append((s, 1))
         events.append((e, -1))
     events.sort()
+    # sample times derived from an integer index: `t += step` accumulates
+    # float error over a 24 h horizon (8640 additions of 10.0 drift past the
+    # exact grid) and can gain/lose a boundary sample, skewing percentiles
     samples = []
-    i, cur, t = 0, 0, 0.0
-    while t <= horizon:
+    i, cur = 0, 0
+    for k in range(int(horizon / step + 1e-9) + 1):
+        t = k * step
         while i < len(events) and events[i][0] <= t:
             cur += events[i][1]
             i += 1
         samples.append(cur)
-        t += step
     samples = np.array(samples)
     denom = total if total > 0 else 1.0   # no idle surface -> all shares 0
     return CoverageReport(

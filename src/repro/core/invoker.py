@@ -54,11 +54,15 @@ class Invoker:
         self._registered = False    # True between register() and deregister()
         self.warm_fns: Dict[str, float] = {}   # fn -> last use (LRU)
         self.running: Set[int] = set()         # request ids in flight
-        self._running_reqs: Dict[int, tuple] = {}  # id -> (req, end_event, t_end)
+        # id -> (req, end_event, t_end, t_start)
+        self._running_reqs: Dict[int, tuple] = {}
+        self._running_by_fn: Dict[str, int] = {}   # fn -> in-flight count
         self.t_created = sim.now
         self.t_healthy: Optional[float] = None
         self.t_dead: Optional[float] = None
-        self.n_executed = 0
+        self.n_executed = 0     # useful executions (request not yet terminal)
+        self.n_wasted = 0       # executions of already-decided requests plus
+                                # work killed mid-flight (preemption, hedging)
         self.warmup = float(rng.lognormal(WARMUP_MU, WARMUP_SIGMA))
         sim.after(self.warmup, self._become_healthy)
         # proactive drain before own declared time limit (timeout SIGTERM)
@@ -85,20 +89,24 @@ class Invoker:
         self.sim.cancel(self._deadline_ev)
         if not was_warming:
             self.controller.mark_unavailable(self)
-        # requeue running invocations that cannot finish within the grace
+        # requeue running invocations that cannot finish within the grace.
+        # SIGKILL fires at now + grace, so anything with remaining <= grace
+        # can drain to completion in place; restarting it elsewhere would
+        # throw away progress for nothing.
         for rid in list(self._running_reqs):
-            req, ev, t_end = self._running_reqs[rid]
+            req, ev, t_end, t_start = self._running_reqs[rid]
             remaining = t_end - self.sim.now
-            if remaining > self.grace - self.drain_margin:
+            if remaining > self.grace:
                 if req.interruptible:
                     self.sim.cancel(ev)
-                    del self._running_reqs[rid]
-                    self.running.discard(rid)
+                    self._drop(rid, req)
+                    self.controller.note_undispatch(
+                        req, self, self.sim.now - t_start, "requeue")
                     self.controller.requeue_fast(req)
-                # non-interruptible long calls ride until SIGKILL (-> timeout)
+                # non-interruptible long calls ride until SIGKILL (-> failed)
         drain_time = 2.0 + float(self.rng.random())  # de-register + flush
         if self._running_reqs:
-            latest = max(t for (_, _, t) in self._running_reqs.values())
+            latest = max(t for (_, _, t, _) in self._running_reqs.values())
             exit_at = min(max(latest, self.sim.now + drain_time),
                           self.sim.now + self.grace)
         else:
@@ -117,13 +125,19 @@ class Invoker:
         worker, and every pending _finish event is cancelled so a dead invoker
         can never report a completion."""
         for rid in list(self._running_reqs):
-            req, ev, _ = self._running_reqs.pop(rid)
+            req, ev, _, t_start = self._running_reqs.pop(rid)
             self.sim.cancel(ev)
             self.running.discard(rid)
-            if req.outcome is None:
-                if req.interruptible:
-                    self.controller.requeue_fast(req)
-                else:
+            self._fn_dec(req.fn)
+            elapsed = self.sim.now - t_start
+            if req.outcome is None and req.interruptible:
+                self.controller.note_undispatch(req, self, elapsed, "requeue")
+                self.controller.requeue_fast(req)
+            else:
+                self.n_wasted += 1
+                self.controller.note_undispatch(
+                    req, self, elapsed, "preempt_kill")
+                if req.outcome is None:
                     self.controller.complete(req, "failed")
 
     def _exit(self):
@@ -159,21 +173,80 @@ class Invoker:
             self._start(req)
 
     def _start(self, req: Request):
+        if req.id in self._running_reqs:
+            # a hedged/requeued twin of a request already executing here:
+            # starting it twice would corrupt the in-flight tables — the
+            # copy is consumed without a dispatch, which the reliability
+            # layer needs to know for its live-copy accounting
+            self.controller.note_undispatch(req, self, 0.0, "duplicate_drop")
+            return
         exec_time = self.executor(req) if self.executor else req.exec_time
         cold = req.fn not in self.warm_fns
         if cold and len(self.warm_fns) >= self.max_warm:
-            lru = min(self.warm_fns, key=self.warm_fns.get)
-            del self.warm_fns[lru]
+            # evict the least-recently-used container, skipping functions
+            # with in-flight requests — their containers demonstrably exist,
+            # and evicting the bookkeeping would mis-bill the next call as a
+            # cold start. If everything is busy, temporarily exceed max_warm.
+            lru = min((fn for fn in self.warm_fns
+                       if not self._running_by_fn.get(fn)),
+                      key=self.warm_fns.get, default=None)
+            if lru is not None:
+                del self.warm_fns[lru]
         self.warm_fns[req.fn] = self.sim.now
         dur = self.overhead + (self.cold_start if cold else 0.0) + exec_time
         t_end = self.sim.now + dur
         ev = self.sim.at(t_end, self._finish, req)
         self.running.add(req.id)
-        self._running_reqs[req.id] = (req, ev, t_end)
+        self._running_reqs[req.id] = (req, ev, t_end, self.sim.now)
+        self._running_by_fn[req.fn] = self._running_by_fn.get(req.fn, 0) + 1
+        self.controller.note_dispatch(req, self)
+
+    def _fn_dec(self, fn: str):
+        n = self._running_by_fn.get(fn, 0)
+        if n <= 1:
+            self._running_by_fn.pop(fn, None)
+        else:
+            self._running_by_fn[fn] = n - 1
+
+    def _drop(self, rid: int, req: Request):
+        """Remove a request from the in-flight tables (event NOT cancelled)."""
+        del self._running_reqs[rid]
+        self.running.discard(rid)
+        self._fn_dec(req.fn)
+
+    def cancel_running(self, rid: int) -> Optional[float]:
+        """Abort an in-flight invocation (hedge loser, post-timeout reap).
+        Returns the seconds of work thrown away, or None when the request is
+        not running here. Frees the slot and pulls new work."""
+        entry = self._running_reqs.get(rid)
+        if entry is None:
+            return None
+        req, ev, _, t_start = entry
+        self.sim.cancel(ev)
+        self._drop(rid, req)
+        self.n_wasted += 1
+        elapsed = self.sim.now - t_start
+        self.kick()
+        return elapsed
 
     def _finish(self, req: Request):
+        entry = self._running_reqs.pop(req.id, None)
         self.running.discard(req.id)
-        self._running_reqs.pop(req.id, None)
-        self.n_executed += 1
-        self.controller.complete(req, "success")
+        if entry is not None:
+            self._fn_dec(req.fn)
+        # LRU stamp at completion, not just dispatch: a long call keeps its
+        # container warm the whole time it runs, so recency is measured from
+        # when the container was last *occupied*, not last handed work.
+        if req.fn in self.warm_fns:
+            self.warm_fns[req.fn] = self.sim.now
+        if req.outcome is None:
+            self.n_executed += 1
+            self.controller.note_undispatch(req, self, 0.0, "finish")
+            self.controller.complete(req, "success")
+        else:
+            # the request was already decided (timed out while running, or a
+            # hedged twin won): the whole execution was wasted work
+            self.n_wasted += 1
+            dur = (self.sim.now - entry[3]) if entry is not None else 0.0
+            self.controller.note_undispatch(req, self, dur, "stale_finish")
         self.kick()

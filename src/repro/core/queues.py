@@ -23,7 +23,9 @@ class Request:
     id: int = dataclasses.field(default_factory=lambda: next(_REQ_IDS))
     attempts: int = 0
     via_fast_lane: bool = False
-    outcome: Optional[str] = None   # success | timeout | failed | 503 | lost
+    # success | timeout | failed (died during execution) | 503 |
+    # lost (reliability layer exhausted retries without a placement)
+    outcome: Optional[str] = None
     reject_reason: str = ""         # on 503: no_invoker | throttled:* | ...
     t_invoked: Optional[float] = None
     t_completed: Optional[float] = None

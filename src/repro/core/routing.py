@@ -16,6 +16,11 @@ topic message lands on. Three policies ship:
                                it stays healthy and un-backlogged, falling
                                back to least-loaded; fewer cold starts than
                                pure least-loaded, better spread than hashing.
+  - :class:`DeadlineAwareRouter` — rFaaS-style lease awareness: filter out
+                               invokers whose remaining scheduled lifetime
+                               (``sched_end - now``) is too short to finish
+                               the request before the drain/SIGKILL window,
+                               then place least-loaded among the survivors.
 
 Routers are deliberately free of controller internals beyond the read-only
 surface (``healthy_order``, ``topics``, ``invokers``,
@@ -116,3 +121,53 @@ class LocalityRouter(BaseRouter):
     def on_deregister(self, inv: "Invoker") -> None:
         self.affinity = {fn: i for fn, i in self.affinity.items()
                          if i != inv.id}
+
+
+class DeadlineAwareRouter(BaseRouter):
+    """Lease-aware placement for ephemeral pilot workers (cf. rFaaS): an
+    invoker is *eligible* for a request only when its remaining scheduled
+    lifetime covers the request's expected occupancy — dispatch overhead, a
+    cold start if the function is not warm there, the nominal execution time
+    (scaled by ``runtime_factor`` for heavy-tailed workloads), the invoker's
+    own drain margin, and an extra safety ``margin``. Among eligible invokers
+    the least-loaded wins (ties on the lowest id).
+
+    When *no* invoker can finish the request before its kill deadline, the
+    one with the longest remaining lease is chosen: the attempt makes the
+    most progress before the preemption boundary, which matters once the
+    reliability layer retries or the SIGTERM hand-off restarts it."""
+
+    def __init__(self, margin: float = 0.0, runtime_factor: float = 1.0,
+                 queue_penalty_s: float = 0.0):
+        self.margin = margin
+        self.runtime_factor = runtime_factor
+        # optional: bill each already-queued message as this many seconds of
+        # delay before the request would even start executing
+        self.queue_penalty_s = queue_penalty_s
+
+    def _expected_occupancy(self, req: "Request", inv: "Invoker",
+                            backlog: int) -> float:
+        cold = 0.0 if req.fn in inv.warm_fns else inv.cold_start
+        return (inv.overhead + cold + req.exec_time * self.runtime_factor
+                + backlog * self.queue_penalty_s)
+
+    def route(self, req: "Request", ctrl: "Controller") -> Optional[int]:
+        order = ctrl.healthy_order
+        if not order:
+            return None
+        now = ctrl.sim.now
+        best_key, best = None, None
+        for i in order:
+            inv = ctrl.invokers[i]
+            backlog = len(ctrl.topics[i])
+            lease = inv.sched_end - now
+            need = (self._expected_occupancy(req, inv, backlog)
+                    + inv.drain_margin + self.margin)
+            if lease < need:
+                continue
+            key = (_load(ctrl, i), i)
+            if best_key is None or key < best_key:
+                best_key, best = key, i
+        if best is not None:
+            return best
+        return max(order, key=lambda i: (ctrl.invokers[i].sched_end, -i))

@@ -6,6 +6,7 @@ from repro.faas.admission import AdmissionController, TokenBucket
 from repro.faas.autoscaler import AdaptiveJobManager
 from repro.faas.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                 TimeSampler)
+from repro.faas.reliability import NoReliability, RetryPolicy
 from repro.faas.slo import ClassReport, SLOClass, default_slos, per_class_report
 from repro.faas.workloads import (FunctionClass, WorkloadSuite, burst_suite,
                                   default_suite, serving_suite)
@@ -13,6 +14,7 @@ from repro.faas.workloads import (FunctionClass, WorkloadSuite, burst_suite,
 __all__ = [
     "AdmissionController", "TokenBucket", "AdaptiveJobManager",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "TimeSampler",
+    "NoReliability", "RetryPolicy",
     "ClassReport", "SLOClass", "default_slos", "per_class_report",
     "FunctionClass", "WorkloadSuite", "burst_suite", "default_suite",
     "serving_suite",

@@ -11,15 +11,18 @@ both and is the only construction path benchmarks/examples use.
 from repro.platform.interfaces import (AdmissionPolicy, Executor, Router,
                                        Scaler, WorkloadSource)
 from repro.platform.registry import available, register, resolve
-from repro.platform.scenario import (PlatformSection, ScenarioConfig,
-                                     SchedulingSection, TraceSection,
-                                     WorkloadSection)
+from repro.platform.scenario import (PlatformSection, ReliabilitySection,
+                                     ScenarioConfig, SchedulingSection,
+                                     TraceSection, WorkloadSection)
 # component modules register themselves on import
-from repro.platform.routers import HashRouter, LeastLoadedRouter, LocalityRouter
+from repro.platform.routers import (DeadlineAwareRouter, HashRouter,
+                                    LeastLoadedRouter, LocalityRouter)
 from repro.platform.scalers import AdaptiveJobManager, JobManager
 from repro.platform.sources import SuiteLoad, UniformLoad
 from repro.platform.executors import ServingExecutor, SimExecutor
 from repro.platform import admission as _admission  # noqa: F401 (registers)
+from repro.platform import reliability as _reliability  # noqa: F401 (registers)
+from repro.platform.reliability import RetryPolicy
 from repro.platform.runtime import (HarvestConfig, HarvestResult,
                                     HarvestRuntime, Platform, nan_to_none)
 
@@ -27,8 +30,9 @@ __all__ = [
     "AdmissionPolicy", "Executor", "Router", "Scaler", "WorkloadSource",
     "available", "register", "resolve",
     "ScenarioConfig", "TraceSection", "WorkloadSection",
-    "SchedulingSection", "PlatformSection",
+    "SchedulingSection", "PlatformSection", "ReliabilitySection",
     "HashRouter", "LeastLoadedRouter", "LocalityRouter",
+    "DeadlineAwareRouter", "RetryPolicy",
     "JobManager", "AdaptiveJobManager",
     "UniformLoad", "SuiteLoad",
     "SimExecutor", "ServingExecutor",

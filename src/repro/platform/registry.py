@@ -21,7 +21,8 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, List
 
-KINDS = ("router", "scaler", "admission", "workload", "executor", "suite")
+KINDS = ("router", "scaler", "admission", "workload", "executor", "suite",
+         "reliability")
 
 _REGISTRY: Dict[str, Dict[str, Any]] = {k: {} for k in KINDS}
 

@@ -4,11 +4,14 @@ platform layer); this module binds them to registry keys and is the home for
 future platform-only routing policies."""
 from __future__ import annotations
 
-from repro.core.routing import HashRouter, LeastLoadedRouter, LocalityRouter
+from repro.core.routing import (DeadlineAwareRouter, HashRouter,
+                                LeastLoadedRouter, LocalityRouter)
 from repro.platform.registry import register
 
 register("router", "hash")(HashRouter)
 register("router", "least-loaded")(LeastLoadedRouter)
 register("router", "locality")(LocalityRouter)
+register("router", "deadline-aware")(DeadlineAwareRouter)
 
-__all__ = ["HashRouter", "LeastLoadedRouter", "LocalityRouter"]
+__all__ = ["DeadlineAwareRouter", "HashRouter", "LeastLoadedRouter",
+           "LocalityRouter"]

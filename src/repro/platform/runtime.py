@@ -69,6 +69,9 @@ class HarvestResult:
     per_class: List[ClassReport] = dataclasses.field(default_factory=list)
     n_throttled: int = 0                # 503s due to admission control
     metrics: Optional[MetricsRegistry] = None
+    n_wasted_execs: int = 0             # stale/killed executions (see Invoker)
+    goodput_s: float = 0.0              # successful request-seconds
+    reliability: Optional[Dict[str, float]] = None  # RetryPolicy.summary()
 
     def summary(self) -> str:
         oc = self.outcome_counts
@@ -119,11 +122,13 @@ class Platform:
             self, **sc.platform.admission_params)
         self.router = resolve("router", sc.platform.router)(
             **sc.platform.router_params)
+        self.reliability = resolve("reliability", sc.reliability.policy)(
+            self, **sc.reliability.params)
         self.controller = Controller(
             self.sim,
             queue_depth_soft_limit=sc.platform.queue_depth_soft_limit,
             admission=self.admission, metrics=self.metrics,
-            router=self.router)
+            router=self.router, reliability=self.reliability)
         if executor is not None:
             from repro.platform.executors import as_executor
             self.executor = as_executor(executor)
@@ -158,6 +163,7 @@ class Platform:
             self.sampler.track(state, g)
         self.metrics.gauge("healthy_invokers",
                            fn=self.controller.healthy_count)
+        self.metrics.gauge("wasted_execs", fn=self.slurm.total_wasted)
         self.workload.schedule(self)
 
     @classmethod
@@ -248,6 +254,10 @@ class Platform:
             per_class=per_class_report(self.requests, self.slos),
             n_throttled=(adm.n_throttled + adm.n_fn_capped) if adm else 0,
             metrics=self.metrics,
+            n_wasted_execs=self.slurm.total_wasted(),
+            goodput_s=float(sum(r.exec_time for r in done)),
+            reliability=(self.reliability.summary()
+                         if self.reliability is not None else None),
         )
 
 

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 from repro.core.trace import TraceConfig
 
@@ -100,8 +100,33 @@ class PlatformSection:
     invoker_params: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
+@dataclasses.dataclass
+class ReliabilitySection:
+    """Retry/hedging policy in the controller's terminal path. ``policy`` is
+    a reliability registry key (``none`` leaves the paper's behaviour:
+    preemption deaths are final). The remaining fields parameterise the
+    bundled ``retry`` policy; ``params`` passes anything further straight to
+    the registered factory."""
+    policy: str = "none"                # reliability registry key
+    max_retries: int = 2                # default per-request retry budget
+    retry_budgets: Dict[str, int] = dataclasses.field(default_factory=dict)
+    backoff_base: float = 0.5           # first retry delay (seconds)
+    backoff_factor: float = 2.0
+    backoff_max: float = 30.0
+    # which would-be-terminal outcomes a retry absorbs. Only "failed"
+    # (execution died with its worker) ever reaches the hook — timeouts and
+    # 503s commit outside Controller.complete — so entries beyond "failed"
+    # are inert; [] gives hedging-only semantics.
+    retry_on: List[str] = dataclasses.field(
+        default_factory=lambda: ["failed"])
+    hedge_delay: Optional[float] = None  # None disables hedging
+    max_hedges: int = 1
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
 _SECTIONS = {"trace": TraceSection, "workload": WorkloadSection,
-             "scheduling": SchedulingSection, "platform": PlatformSection}
+             "scheduling": SchedulingSection, "platform": PlatformSection,
+             "reliability": ReliabilitySection}
 
 
 @dataclasses.dataclass
@@ -116,6 +141,8 @@ class ScenarioConfig:
         default_factory=SchedulingSection)
     platform: PlatformSection = dataclasses.field(
         default_factory=PlatformSection)
+    reliability: ReliabilitySection = dataclasses.field(
+        default_factory=ReliabilitySection)
 
     # --- (de)serialisation ---------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
@@ -190,6 +217,62 @@ class ScenarioConfig:
     def multi_tenant_burst(cls, duration: float = 2 * 3600.0,
                            scaler: str = "static") -> "ScenarioConfig":
         return cls.multi_tenant(duration, suite="burst", scaler=scaler)
+
+    @classmethod
+    def preemption_storm(cls, duration: float = 2 * 3600.0,
+                         seed: int = 5) -> "ScenarioConfig":
+        """Reliability stress day: idle windows are short and fragmented while
+        the backfill plan systematically over-predicts them (slack 1.2-4.0x),
+        so pilots are routinely evicted mid-request; calls run *longer than
+        the preemption grace* and are mostly non-interruptible — exactly the
+        work that "failed during execution" in the paper's Sec. V-C (a call
+        with more remaining time than the grace window cannot drain to
+        completion in place). Retries default on; benchmarks flip
+        ``reliability.policy`` / ``platform.router`` per cell."""
+        return cls(
+            name="preemption_storm", duration=duration, seed=seed,
+            trace=TraceSection(
+                avg_idle_nodes=9.0, full_share=0.06, seed=29,
+                params={
+                    # short, fragmented windows: median ~3.5 min, p95 ~12 min
+                    "idle_quantiles": [[0.0, 60.0], [0.25, 140.0],
+                                       [0.5, 210.0], [0.75, 330.0],
+                                       [0.9, 520.0], [0.98, 760.0],
+                                       [1.0, 1100.0]],
+                    # the plan believes windows are far longer than they are
+                    "slack_lo": 1.2, "slack_hi": 4.0,
+                }),
+            workload=WorkloadSection(qps=0.5, exec_time=240.0, timeout=1800.0,
+                                     non_interruptible_share=0.7),
+            scheduling=SchedulingSection(model="fib"),
+            reliability=ReliabilitySection(policy="retry", max_retries=3,
+                                           backoff_base=0.5))
+
+    @classmethod
+    def churn_day(cls, duration: float = 2 * 3600.0,
+                  seed: int = 6) -> "ScenarioConfig":
+        """Sustained worker churn rather than an outright storm: moderately
+        fragmented windows with optimistic predictions and a mixed
+        interruptible/non-interruptible load of mid-length calls. Hedging is
+        armed at 150 s — an attempt that deep into a 210 s call is exposed to
+        preemption for its remaining minute, so the duplicate buys insurance
+        against a drain/SIGKILL ending the original."""
+        return cls(
+            name="churn_day", duration=duration, seed=seed,
+            trace=TraceSection(
+                avg_idle_nodes=10.0, full_share=0.04, seed=31,
+                params={
+                    "idle_quantiles": [[0.0, 80.0], [0.25, 180.0],
+                                       [0.5, 300.0], [0.75, 520.0],
+                                       [0.9, 900.0], [0.98, 1500.0],
+                                       [1.0, 2400.0]],
+                    "slack_lo": 0.9, "slack_hi": 3.0,
+                }),
+            workload=WorkloadSection(qps=1.0, exec_time=210.0, timeout=1500.0,
+                                     non_interruptible_share=0.4),
+            scheduling=SchedulingSection(model="fib"),
+            reliability=ReliabilitySection(policy="retry", max_retries=2,
+                                           hedge_delay=150.0))
 
     @classmethod
     def serving_burst(cls, duration: float = 2 * 3600.0,

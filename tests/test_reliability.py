@@ -1,0 +1,499 @@
+"""Reliability under preemption: the PR-4 drain-window bugfixes (sigterm
+requeue threshold, warm-LRU stamping/eviction, wasted-work split) and the
+retry/hedging layer (budgeted retries, backoff, hedging, deadline-aware
+placement), plus a hypothesis check that retries never duplicate a terminal
+outcome."""
+import numpy as np
+import pytest
+
+from repro.core import Controller, Invoker, Request, Simulator
+from repro.core.routing import DeadlineAwareRouter
+from repro.core.trace import IdleWindow
+from repro.faas.reliability import RetryPolicy
+from repro.platform import (Platform, ReliabilitySection, ScenarioConfig,
+                            SchedulingSection, WorkloadSection, available)
+
+TERMINAL = {"success", "timeout", "failed", "503", "lost"}
+
+
+def _one_invoker(grace=180.0, seed=0, sched_end=4000.0, **kw):
+    sim = Simulator()
+    ctrl = Controller(sim)
+    inv = Invoker(sim, ctrl, node=0, sched_end=sched_end,
+                  rng=np.random.default_rng(seed), grace=grace, **kw)
+    sim.run_until(60.0)
+    assert ctrl.healthy_count() == 1
+    return sim, ctrl, inv
+
+
+def _submit_running(sim, ctrl, inv, exec_time, timeout=3600.0, **kw):
+    req = Request(fn=kw.pop("fn", "f"), exec_time=exec_time, arrival=sim.now,
+                  timeout=timeout, **kw)
+    assert ctrl.submit(req)
+    assert req.id in inv._running_reqs
+    return req
+
+
+# --- satellite: sigterm requeue threshold (grace, not grace - drain_margin) ----
+def test_request_inside_grace_window_drains_in_place():
+    """Remaining time in (grace - drain_margin, grace] at SIGTERM: SIGKILL
+    only fires at now + grace, so the call can finish where it is — the
+    pre-fix threshold restarted it from scratch on another worker."""
+    sim, ctrl, inv = _one_invoker()
+    req = _submit_running(sim, ctrl, inv, exec_time=200.0)
+    t_end = inv._running_reqs[req.id][2]
+    # SIGTERM with remaining = grace - drain_margin + 5 = 170 s
+    sim.at(t_end - (inv.grace - inv.drain_margin + 5.0), inv.sigterm, "evict")
+    sim.run_until(3600.0)
+    assert req.outcome == "success"
+    assert req.attempts == 0 and not req.via_fast_lane   # never restarted
+    assert req.t_completed == t_end                      # finished in place
+    assert inv.n_executed == 1
+
+
+def test_request_finishing_exactly_at_grace_boundary_succeeds():
+    """remaining == grace exactly: the completion event at t_end fires before
+    the drain exit scheduled for the same instant (FIFO tie order)."""
+    sim, ctrl, inv = _one_invoker()
+    req = _submit_running(sim, ctrl, inv, exec_time=300.0)
+    t_end = inv._running_reqs[req.id][2]
+    sim.at(t_end - inv.grace, inv.sigterm, "evict")
+    sim.run_until(3600.0)
+    assert req.outcome == "success"
+    assert req.t_completed == t_end
+    assert inv.state == "dead" and inv.t_dead == t_end
+
+
+def test_request_beyond_grace_is_requeued_and_restarts_elsewhere():
+    """remaining just over grace: the call cannot survive to SIGKILL, so an
+    interruptible request is handed off and re-executed from scratch."""
+    sim = Simulator()
+    ctrl = Controller(sim)
+    rng = np.random.default_rng(0)
+    inv1 = Invoker(sim, ctrl, node=0, sched_end=8000.0, rng=rng)
+    inv2 = Invoker(sim, ctrl, node=1, sched_end=8000.0, rng=rng)
+    sim.run_until(60.0)
+    req = Request(fn="f", exec_time=300.0, arrival=sim.now, timeout=3600.0)
+    assert ctrl.submit(req)
+    runner, other = ((inv1, inv2) if req.id in inv1._running_reqs
+                     else (inv2, inv1))
+    t_end = runner._running_reqs[req.id][2]
+    sim.at(t_end - (runner.grace + 1.0), runner.sigterm, "evict")
+    sim.run_until(8000.0)
+    assert req.outcome == "success"
+    assert req.via_fast_lane and req.attempts == 1
+    assert other.n_executed == 1 and runner.n_executed == 0
+
+
+# --- satellite: warm-container LRU ---------------------------------------------
+def test_lru_recency_is_stamped_at_finish():
+    """A long call that *finishes* last must be the most recently used
+    container even though it was *dispatched* first."""
+    sim, ctrl, inv = _one_invoker(max_warm_containers=2, concurrency=4)
+    t0 = sim.now
+    ra = Request(fn="A", exec_time=10.0, arrival=t0, timeout=600.0)
+    rb = Request(fn="B", exec_time=0.01, arrival=t0, timeout=600.0)
+    assert ctrl.submit(ra) and ctrl.submit(rb)
+    sim.run_until(t0 + 30.0)            # A finishes ~10.6s, B ~0.6s
+    assert ra.outcome == rb.outcome == "success"
+    assert inv.warm_fns["A"] > inv.warm_fns["B"]
+    # third function forces an eviction: B (stale) goes, A (fresh) stays
+    rc = Request(fn="C", exec_time=0.01, arrival=sim.now, timeout=600.0)
+    assert ctrl.submit(rc)
+    sim.run_until(sim.now + 5.0)
+    assert set(inv.warm_fns) == {"A", "C"}
+
+
+def test_lru_never_evicts_function_with_inflight_requests():
+    """The LRU victim must have no running requests — its container
+    demonstrably exists, and evicting the bookkeeping would bill the next
+    call as a cold start."""
+    sim, ctrl, inv = _one_invoker(max_warm_containers=2, concurrency=4)
+    t0 = sim.now
+    ra = Request(fn="A", exec_time=100.0, arrival=t0, timeout=600.0)
+    assert ctrl.submit(ra)              # A dispatched first (oldest stamp)
+    sim.run_until(t0 + 1.0)
+    rb = Request(fn="B", exec_time=0.01, arrival=sim.now, timeout=600.0)
+    assert ctrl.submit(rb)
+    sim.run_until(sim.now + 2.0)        # B done; A still running
+    rc = Request(fn="C", exec_time=0.01, arrival=sim.now, timeout=600.0)
+    assert ctrl.submit(rc)              # eviction: A is busy -> B must go
+    sim.run_until(sim.now + 2.0)
+    assert "A" in inv.warm_fns and "B" not in inv.warm_fns
+    # a second call of A while it still runs must be billed warm
+    ra2 = Request(fn="A", exec_time=0.01, arrival=sim.now, timeout=600.0)
+    assert ctrl.submit(ra2)
+    dur = inv._running_reqs[ra2.id][2] - sim.now
+    assert dur == pytest.approx(inv.overhead + 0.01)    # no cold start
+
+
+def test_all_warm_containers_busy_exceeds_cap_instead_of_evicting():
+    sim, ctrl, inv = _one_invoker(max_warm_containers=2, concurrency=4)
+    t0 = sim.now
+    for fn in ("A", "B"):
+        assert ctrl.submit(Request(fn=fn, exec_time=100.0, arrival=t0,
+                                   timeout=600.0))
+    rc = Request(fn="C", exec_time=0.01, arrival=t0, timeout=600.0)
+    assert ctrl.submit(rc)
+    assert set(inv.warm_fns) == {"A", "B", "C"}     # nothing evictable
+
+
+# --- satellite: wasted-work split ----------------------------------------------
+def test_timed_out_request_completing_on_live_worker_counts_wasted():
+    sim, ctrl, inv = _one_invoker()
+    req = _submit_running(sim, ctrl, inv, exec_time=10.0, timeout=1.0)
+    sim.run_until(sim.now + 30.0)
+    assert req.outcome == "timeout"
+    assert inv.state == "healthy"       # the worker outlived the request
+    assert inv.n_executed == 0 and inv.n_wasted == 1
+
+
+def test_preemption_kill_counts_wasted():
+    sim, ctrl, inv = _one_invoker()
+    req = _submit_running(sim, ctrl, inv, exec_time=400.0,
+                          interruptible=False)
+    sim.run_until(sim.now + 10.0)
+    inv.sigterm("evict")
+    sim.after(inv.grace, inv.sigkill)
+    sim.run_until(sim.now + 1000.0)
+    assert req.outcome == "failed"
+    assert inv.n_executed == 0 and inv.n_wasted == 1
+
+
+def test_wasted_execs_surface_in_platform_result_and_metrics():
+    sc = ScenarioConfig(duration=1200.0, seed=7,
+                        workload=WorkloadSection(qps=1.0, exec_time=30.0,
+                                                 timeout=5.0),
+                        scheduling=SchedulingSection(model="fib"))
+    p = Platform.build(sc)
+    res = p.run()
+    assert res.n_wasted_execs > 0       # 5s timeouts, 30s calls: all wasted
+    assert res.n_wasted_execs == p.slurm.total_wasted()
+    assert res.metrics.collect()["wasted_execs"] == res.n_wasted_execs
+    # useful executions exclude them
+    assert p.slurm.total_executed() == res.outcome_counts.get("success", 0)
+
+
+# --- satellite: warming death with queued work ----------------------------------
+def test_warming_death_leaves_queued_topics_untouched():
+    sim = Simulator()
+    ctrl = Controller(sim)
+    rng = np.random.default_rng(3)
+    inv_a = Invoker(sim, ctrl, node=0, sched_end=4000.0, rng=rng)
+    sim.run_until(60.0)
+    reqs = [Request(fn=f"f{i}", exec_time=30.0, arrival=sim.now,
+                    timeout=3600.0) for i in range(20)]
+    for r in reqs:
+        assert ctrl.submit(r)
+    inv_b = Invoker(sim, ctrl, node=1, sched_end=sim.now + 4000.0, rng=rng)
+    assert inv_b.state == "warming"
+    inv_b.sigterm("evict")              # dies before ever registering
+    sim.run_until(sim.now + 300.0)
+    assert inv_b.state == "dead"
+    assert inv_b.id not in ctrl.topics and inv_b.id not in ctrl.invokers
+    assert all(r.outcome == "success" for r in reqs)
+    assert inv_a.n_executed == len(reqs)
+
+
+# --- retry policy ----------------------------------------------------------------
+def _fleet_with_policy(n=2, sched_ends=(4000.0, 4000.0), seed=1,
+                       router=None, **policy_kw):
+    sim = Simulator()
+    policy = RetryPolicy(sim, **policy_kw)
+    ctrl = Controller(sim, reliability=policy, router=router)  # self-binds
+    rng = np.random.default_rng(seed)
+    invs = [Invoker(sim, ctrl, node=i, sched_end=sched_ends[i], rng=rng)
+            for i in range(n)]
+    sim.run_until(60.0)
+    assert ctrl.healthy_count() == n
+    return sim, ctrl, invs, policy
+
+
+def test_retry_absorbs_preemption_death_and_succeeds_elsewhere():
+    """A non-interruptible call killed with its worker is re-placed and wins
+    on the survivor instead of staying 'failed'."""
+    sim, ctrl, invs, policy = _fleet_with_policy()
+    req = Request(fn="f", exec_time=400.0, arrival=sim.now, timeout=3000.0,
+                  interruptible=False)
+    assert ctrl.submit(req)
+    runner = invs[0] if req.id in invs[0]._running_reqs else invs[1]
+    runner.sigterm("evict")
+    sim.after(runner.grace, runner.sigkill)
+    sim.run_until(3000.0)
+    assert req.outcome == "success"
+    assert policy.metrics.total("retries_total") >= 1
+    assert policy.metrics.total("wasted_seconds_total") > 0.0
+    assert ctrl.completed.count(req) == 1
+
+
+def test_retry_budget_exhaustion_commits_failed():
+    sim, ctrl, invs, policy = _fleet_with_policy(max_retries=0)
+    req = Request(fn="f", exec_time=400.0, arrival=sim.now, timeout=3000.0,
+                  interruptible=False)
+    assert ctrl.submit(req)
+    runner = invs[0] if req.id in invs[0]._running_reqs else invs[1]
+    runner.sigterm("evict")
+    sim.after(runner.grace, runner.sigkill)
+    sim.run_until(3000.0)
+    assert req.outcome == "failed"
+    assert policy.metrics.total("retry_exhausted_total") == 1
+
+
+def test_retry_without_any_healthy_invoker_commits_lost():
+    sim = Simulator()
+    policy = RetryPolicy(sim, max_retries=1, backoff_base=1.0)
+    ctrl = Controller(sim, reliability=policy)
+    inv = Invoker(sim, ctrl, node=0, sched_end=4000.0,
+                  rng=np.random.default_rng(2))
+    sim.run_until(60.0)
+    req = Request(fn="f", exec_time=400.0, arrival=sim.now, timeout=3000.0,
+                  interruptible=False)
+    assert ctrl.submit(req)
+    inv.sigterm("evict")
+    sim.after(inv.grace, inv.sigkill)
+    sim.run_until(3000.0)               # no other worker ever appears
+    assert req.outcome == "lost"
+    assert ctrl.completed.count(req) == 1
+
+
+def test_hedge_duplicates_straggler_and_cancels_loser():
+    # hedging needs a router that spreads: hashing would re-place the twin on
+    # the home invoker, where the duplicate-start guard drops it
+    from repro.core.routing import LeastLoadedRouter
+    sim, ctrl, invs, policy = _fleet_with_policy(
+        sched_ends=(6000.0, 6000.0), router=LeastLoadedRouter(),
+        hedge_delay=5.0, max_hedges=1)
+    req = Request(fn="f", exec_time=100.0, arrival=sim.now, timeout=3000.0)
+    assert ctrl.submit(req)
+    sim.run_until(sim.now + 2000.0)
+    assert req.outcome == "success"
+    assert policy.metrics.total("hedges_total") == 1
+    # exactly one useful execution; the twin was cancelled mid-flight
+    assert sum(i.n_executed for i in invs) == 1
+    assert sum(i.n_wasted for i in invs) == 1
+    assert policy.metrics.total(
+        "wasted_seconds_total") == pytest.approx(95.0, abs=5.0)
+    assert ctrl.completed.count(req) == 1
+    assert not policy._placements       # bookkeeping fully drained
+
+
+def test_hedging_only_config_lets_surviving_twin_win():
+    """retry_on=[] with hedging armed: when the original attempt dies in a
+    preemption, the absorb hook must still swallow the death while the twin
+    runs — the survivor decides the outcome, not the retry configuration."""
+    from repro.core.routing import LeastLoadedRouter
+    sim, ctrl, invs, policy = _fleet_with_policy(
+        sched_ends=(8000.0, 8000.0), router=LeastLoadedRouter(),
+        retry_on=(), hedge_delay=5.0)
+    req = Request(fn="f", exec_time=400.0, arrival=sim.now, timeout=3000.0,
+                  interruptible=False)
+    assert ctrl.submit(req)
+    sim.run_until(sim.now + 20.0)       # hedge fired: running on both
+    runner = invs[0] if req.id in invs[0]._running_reqs else invs[1]
+    other = invs[1] if runner is invs[0] else invs[0]
+    assert req.id in other._running_reqs
+    runner.sigterm("evict")
+    sim.after(runner.grace, runner.sigkill)
+    sim.run_until(5000.0)
+    assert req.outcome == "success"     # twin survived the original's death
+    assert other.n_executed == 1
+    assert policy.metrics.total("hedge_survivor_absorbed_total") == 1
+    assert policy.metrics.total("retries_total") == 0
+    assert ctrl.completed.count(req) == 1
+
+
+def test_queued_hedge_twin_counts_as_alive():
+    """A hedge twin that is enqueued but not yet executing (target invoker at
+    full concurrency) must still count as a live copy: when the original dies
+    in a preemption under a hedging-only config, the death is absorbed and
+    the queued twin runs and wins."""
+    from repro.core.routing import LeastLoadedRouter
+    sim = Simulator()
+    policy = RetryPolicy(sim, retry_on=(), hedge_delay=5.0)
+    ctrl = Controller(sim, reliability=policy, router=LeastLoadedRouter())
+    rng = np.random.default_rng(1)
+    inv_a = Invoker(sim, ctrl, node=0, sched_end=8000.0, rng=rng,
+                    concurrency=2)
+    inv_b = Invoker(sim, ctrl, node=1, sched_end=8000.0, rng=rng,
+                    concurrency=1)
+    sim.run_until(60.0)
+    # load A with the target + filler so the hedge routes to B; keep B busy
+    # long enough that the twin sits queued when A dies
+    req = Request(fn="victim", exec_time=400.0, arrival=sim.now,
+                  timeout=3000.0, interruptible=False)
+    assert ctrl.submit(req) and req.id in inv_a._running_reqs
+    fillers = [Request(fn=f"fill{i}", exec_time=120.0, arrival=sim.now,
+                       timeout=3000.0) for i in range(2)]
+    for f in fillers:
+        assert ctrl.submit(f)
+    sim.run_until(sim.now + 20.0)       # hedge fired at +5 -> queued on B
+    assert req.id not in inv_b._running_reqs
+    assert policy._queued.get(req.id, 0) == 1
+    inv_a.sigterm("evict")
+    sim.after(inv_a.grace, inv_a.sigkill)
+    sim.run_until(5000.0)
+    assert req.outcome == "success"     # the queued twin ran and won
+    assert inv_b.n_executed >= 1
+    assert policy.metrics.total("hedge_survivor_absorbed_total") == 1
+    assert ctrl.completed.count(req) == 1
+    assert not policy._queued and not policy._placements
+
+
+def test_retry_infeasible_inside_deadline_commits_failed():
+    """No absorption when the backoff could not finish before the client
+    deadline anyway — an honest 'failed' beats a guaranteed timeout."""
+    sim, ctrl, invs, policy = _fleet_with_policy(backoff_base=500.0,
+                                                 backoff_max=500.0)
+    req = Request(fn="f", exec_time=400.0, arrival=sim.now, timeout=450.0,
+                  interruptible=False)
+    assert ctrl.submit(req)
+    runner = invs[0] if req.id in invs[0]._running_reqs else invs[1]
+    runner.sigterm("evict")
+    sim.after(runner.grace, runner.sigkill)
+    sim.run_until(3000.0)
+    assert req.outcome == "failed"
+    assert policy.metrics.total("retry_infeasible_total") == 1
+
+
+# --- deadline-aware router -------------------------------------------------------
+def test_deadline_router_prefers_invoker_that_can_finish():
+    sim = Simulator()
+    ctrl = Controller(sim, router=DeadlineAwareRouter())
+    rng = np.random.default_rng(4)
+    short = Invoker(sim, ctrl, node=0, sched_end=200.0, rng=rng)
+    long = Invoker(sim, ctrl, node=1, sched_end=4000.0, rng=rng)
+    sim.run_until(60.0)
+    assert ctrl.healthy_count() == 2
+    # 300 s of work cannot fit the short invoker's remaining lease
+    req = Request(fn="f", exec_time=300.0, arrival=sim.now, timeout=3600.0)
+    assert ctrl.router.route(req, ctrl) == long.id
+    # a tiny call fits both; least-loaded tie-break picks the lowest id
+    tiny = Request(fn="g", exec_time=0.01, arrival=sim.now, timeout=60.0)
+    assert ctrl.router.route(tiny, ctrl) == min(short.id, long.id)
+
+
+def test_deadline_router_falls_back_to_longest_lease():
+    sim = Simulator()
+    ctrl = Controller(sim, router=DeadlineAwareRouter())
+    rng = np.random.default_rng(4)
+    a = Invoker(sim, ctrl, node=0, sched_end=150.0, rng=rng)
+    b = Invoker(sim, ctrl, node=1, sched_end=220.0, rng=rng)
+    sim.run_until(60.0)
+    req = Request(fn="f", exec_time=500.0, arrival=sim.now, timeout=3600.0)
+    assert ctrl.router.route(req, ctrl) == b.id     # nobody fits: max lease
+
+
+# --- scenario / registry surface -------------------------------------------------
+def test_reliability_registry_and_presets_round_trip():
+    assert {"none", "retry"} <= set(available("reliability"))
+    assert "deadline-aware" in available("router")
+    for preset in ("preemption_storm", "churn_day"):
+        cfg = getattr(ScenarioConfig, preset)()
+        assert cfg.reliability.policy == "retry"
+        assert ScenarioConfig.from_json(cfg.to_json()) == cfg
+
+
+def test_reliability_disabled_is_default_and_inert():
+    sc = ScenarioConfig(duration=600.0,
+                        workload=WorkloadSection(qps=0.5))
+    assert sc.reliability == ReliabilitySection()
+    p = Platform.build(sc)
+    assert p.reliability is None and p.controller.reliability is None
+    res = p.run()
+    assert "lost" not in res.outcome_counts
+    assert res.reliability is None
+
+
+# --- conservation under retries --------------------------------------------------
+def _storm_windows():
+    """Badly over-predicted windows, staggered across nodes so that when one
+    pilot is evicted mid-request some other node is still open — the retry
+    has somewhere to land."""
+    out = []
+    for node in range(4):
+        for k in range(4):
+            start = 10.0 + node * 170.0 + k * 700.0
+            out.append(IdleWindow(node=node, start=start, end=start + 450.0,
+                                  predicted_end=start + 1400.0))
+    return out
+
+
+def test_retries_conserve_outcomes_end_to_end():
+    sc = ScenarioConfig(
+        duration=2400.0, seed=7,
+        workload=WorkloadSection(qps=0.2, exec_time=300.0, timeout=1200.0,
+                                 non_interruptible_share=0.6),
+        scheduling=SchedulingSection(model="fib"),
+        # no hedging here: with a twin armed, preemption deaths are absorbed
+        # by the survivor and the retry path would never be exercised
+        reliability=ReliabilitySection(policy="retry", max_retries=2))
+    res = Platform.build(sc, windows=_storm_windows()).run()
+    assert res.n_submitted > 0
+    assert res.reliability["retries"] > 0       # the storm exercised retries
+    for r in res.requests:
+        assert r.outcome in TERMINAL, r
+    assert sum(res.outcome_counts.values()) == res.n_submitted
+
+
+def test_goodput_strictly_improves_on_preemption_storm_preset():
+    """The PR-4 acceptance invariant, pinned at test scale: retry plus
+    deadline-aware placement beats the no-retry baseline on successful
+    request-seconds on the storm day."""
+    results = {}
+    for policy, router in (("none", "hash"), ("retry", "deadline-aware")):
+        sc = ScenarioConfig.preemption_storm(duration=3600.0)
+        sc.reliability.policy = policy
+        sc.platform.router = router
+        results[policy] = Platform.build(sc).run()
+    assert results["retry"].goodput_s > results["none"].goodput_s
+    # fewer requests end badly, not just more seconds served
+    bad = lambda r: (r.outcome_counts.get("failed", 0)
+                     + r.outcome_counts.get("lost", 0))
+    assert bad(results["retry"]) < bad(results["none"])
+
+
+def test_retries_never_duplicate_a_terminal_outcome_fuzz():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(seed=st.integers(min_value=0, max_value=2**16),
+           exec_time=st.floats(min_value=50.0, max_value=400.0),
+           non_int=st.floats(min_value=0.0, max_value=1.0),
+           hedge=st.sampled_from([None, 60.0]),
+           retries=st.integers(min_value=0, max_value=3))
+    @settings(max_examples=15, deadline=None)
+    def run(seed, exec_time, non_int, hedge, retries):
+        """Whatever the retry budget, hedging, and preemption timing: every
+        request commits exactly one terminal outcome, exactly once, and no
+        completion fires from a dead worker."""
+        zombies = []
+        orig_finish = Invoker._finish
+
+        def checked_finish(self, req):
+            if self.state == "dead":
+                zombies.append(req.id)
+            orig_finish(self, req)
+
+        sc = ScenarioConfig(
+            duration=1800.0, seed=seed,
+            workload=WorkloadSection(qps=1.5, exec_time=exec_time,
+                                     timeout=800.0,
+                                     non_interruptible_share=non_int),
+            scheduling=SchedulingSection(model="fib"),
+            reliability=ReliabilitySection(policy="retry",
+                                           max_retries=retries,
+                                           hedge_delay=hedge))
+        p = Platform.build(sc, windows=_storm_windows())
+        Invoker._finish = checked_finish
+        try:
+            res = p.run()
+        finally:
+            Invoker._finish = orig_finish
+        assert zombies == []
+        assert all(r.outcome in TERMINAL for r in res.requests)
+        assert sum(res.outcome_counts.values()) == res.n_submitted
+        seen = [r.id for r in p.controller.completed]
+        assert len(seen) == len(set(seen))      # one terminal commit each
+        assert not p.reliability._placements    # no leaked attempt tracking
+
+    run()
