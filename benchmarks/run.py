@@ -68,6 +68,7 @@ def main() -> None:
     from benchmarks import paper_benches as PB
     from benchmarks import reliability as RL
     from benchmarks import routing as RT
+    from benchmarks import serving_batching as SB
 
     if args.smoke:
         day = resp = grid = 5 * 60.0
@@ -86,6 +87,9 @@ def main() -> None:
         "multitenant": lambda: MT.bench_multi_tenant(grid),
         "routing": lambda: RT.bench_routing(grid),
         "reliability": lambda: RL.bench_reliability(grid),
+        "serving": lambda: SB.bench_serving(
+            n_requests=8 if args.smoke else 16, n_new=8 if args.smoke else 16,
+            repeats=2 if args.smoke else 3),
         "roofline": bench_roofline_summary,
     }
     if args.list:

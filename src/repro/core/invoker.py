@@ -100,6 +100,7 @@ class Invoker:
                 if req.interruptible:
                     self.sim.cancel(ev)
                     self._drop(rid, req)
+                    self._note_preempt(req, t_start, t_end)
                     self.controller.note_undispatch(
                         req, self, self.sim.now - t_start, "requeue")
                     self.controller.requeue_fast(req)
@@ -125,12 +126,13 @@ class Invoker:
         worker, and every pending _finish event is cancelled so a dead invoker
         can never report a completion."""
         for rid in list(self._running_reqs):
-            req, ev, _, t_start = self._running_reqs.pop(rid)
+            req, ev, t_end, t_start = self._running_reqs.pop(rid)
             self.sim.cancel(ev)
             self.running.discard(rid)
             self._fn_dec(req.fn)
             elapsed = self.sim.now - t_start
             if req.outcome is None and req.interruptible:
+                self._note_preempt(req, t_start, t_end)
                 self.controller.note_undispatch(req, self, elapsed, "requeue")
                 self.controller.requeue_fast(req)
             else:
@@ -157,22 +159,53 @@ class Invoker:
             self.on_exit(self)
 
     # --- pull loop ---------------------------------------------------------------
+    def _pop(self) -> Optional[Request]:
+        req = self.controller.fast_lane.pop()
+        if req is None:
+            topic = self.controller.topics.get(self.id)
+            req = topic.pop() if topic else None
+        return req
+
     def kick(self):
-        """Pull work if capacity allows: fast lane first, then own topic."""
+        """Pull work if capacity allows: fast lane first, then own topic.
+
+        Batched-executor seam: an executor exposing ``run_batch`` receives
+        every request admitted in this pull as ONE batch (continuous-batching
+        serving aggregates concurrent in-flight decodes instead of
+        serializing them); plain callables keep the per-request path.
+        """
         if self.state != "healthy":
             return
-        while len(self.running) < self.concurrency:
-            req = self.controller.fast_lane.pop()
+        run_batch = getattr(self.executor, "run_batch", None)
+        if run_batch is None:
+            while len(self.running) < self.concurrency:
+                req = self._pop()
+                if req is None:
+                    return
+                if req.outcome is not None:   # e.g. already timed out
+                    continue
+                self._start(req)
+            return
+        batch: list = []
+        seen = set()
+        while len(self.running) + len(batch) < self.concurrency:
+            req = self._pop()
             if req is None:
-                topic = self.controller.topics.get(self.id)
-                req = topic.pop() if topic else None
-            if req is None:
-                return
-            if req.outcome is not None:   # e.g. already timed out
+                break
+            if req.outcome is not None:
                 continue
-            self._start(req)
+            if req.id in self._running_reqs or req.id in seen:
+                # hedged/requeued twin (see _start): consume without dispatch
+                self.controller.note_undispatch(req, self, 0.0, "duplicate_drop")
+                continue
+            seen.add(req.id)
+            batch.append(req)
+        if not batch:
+            return
+        for req, exec_time in zip(batch, run_batch(batch)):
+            self._start(req, exec_time)
 
-    def _start(self, req: Request):
+    def _start(self, req: Request, exec_time: Optional[float] = None):
         if req.id in self._running_reqs:
             # a hedged/requeued twin of a request already executing here:
             # starting it twice would corrupt the in-flight tables — the
@@ -180,7 +213,8 @@ class Invoker:
             # layer needs to know for its live-copy accounting
             self.controller.note_undispatch(req, self, 0.0, "duplicate_drop")
             return
-        exec_time = self.executor(req) if self.executor else req.exec_time
+        if exec_time is None:
+            exec_time = self.executor(req) if self.executor else req.exec_time
         cold = req.fn not in self.warm_fns
         if cold and len(self.warm_fns) >= self.max_warm:
             # evict the least-recently-used container, skipping functions
@@ -200,6 +234,16 @@ class Invoker:
         self._running_reqs[req.id] = (req, ev, t_end, self.sim.now)
         self._running_by_fn[req.fn] = self._running_by_fn.get(req.fn, 0) + 1
         self.controller.note_dispatch(req, self)
+
+    def _note_preempt(self, req: Request, t_start: float, t_end: float):
+        """Preemption hand-off seam: a batched serving executor keeps the
+        prefix of the decoded stream matching the virtual time this doomed
+        invocation got, so the requeued request resumes instead of
+        restarting (continuous-batching drain, beyond the paper's
+        queued-work-only hand-off)."""
+        hook = getattr(self.executor, "note_preempt", None)
+        if hook is not None:
+            hook(req, self.sim.now - t_start, t_end - t_start)
 
     def _fn_dec(self, fn: str):
         n = self._running_by_fn.get(fn, 0)

@@ -1,10 +1,13 @@
-"""Serving driver: stand up a ServingEngine for a (reduced) arch and run
-batched generate requests — the FaaS function an HPC-Whisk invoker hosts.
-The FULL-config serve_step is exercised by launch/dryrun.py (decode cells).
+"""Serving driver: stand up a continuous-batching engine for a (reduced)
+arch and serve generate requests — the FaaS function an HPC-Whisk invoker
+hosts. The FULL-config serve_step is exercised by launch/dryrun.py (decode
+cells). ``--sequential`` falls back to the run-to-completion baseline for
+comparison; SIGTERM drains partial generations (the invoker hand-off path).
 """
 from __future__ import annotations
 
 import argparse
+import signal
 import time
 
 import jax
@@ -12,8 +15,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import model as M
-from repro.serving.batching import GenRequest, SlotBatcher
-from repro.serving.engine import ServingEngine
+from repro.serving.batching import GenRequest
+from repro.serving.engine import ContinuousEngine, ServingEngine
 
 
 def main():
@@ -23,34 +26,52 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--batch-slots", type=int, default=4)
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop token: finished slots free early")
+    ap.add_argument("--sequential", action="store_true",
+                    help="run-to-completion baseline instead of continuous batching")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    engine = ServingEngine(cfg, params,
-                           max_seq=args.prompt_len + args.new_tokens + 8)
+    max_seq = args.prompt_len + args.new_tokens + 8
     rng = np.random.default_rng(0)
-    batcher = SlotBatcher(args.batch_slots)
-    for i in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size, size=args.prompt_len).tolist()
-        batcher.add(GenRequest(id=i, prompt=prompt, max_new=args.new_tokens))
+    prompts = [rng.integers(0, cfg.vocab_size, size=args.prompt_len).tolist()
+               for _ in range(args.requests)]
 
     t0 = time.time()
-    # simple loop: run each active slot's request to completion batched
-    while batcher.active() or batcher.waiting:
-        active = batcher.active()
-        prompts = np.stack([np.array(r.prompt, np.int32) for r in active.values()])
-        outs = engine.generate(prompts, args.new_tokens)
-        for (slot, req), row in zip(active.items(), outs):
-            req.generated = row.tolist()
-            req.done = True
-            batcher.finished.append(req)
-            batcher.slots[slot] = None
-        batcher._fill()
+    if args.sequential:
+        engine = ServingEngine(cfg, params, max_seq=max_seq)
+        done = []
+        for i, p in enumerate(prompts):
+            out = engine.generate(np.asarray([p], np.int32), args.new_tokens)
+            done.append(GenRequest(id=i, prompt=p, max_new=args.new_tokens,
+                                   generated=out[0].tolist(), done=True))
+        n_tok = sum(len(r.generated) for r in done)
+        occ = 1.0
+    else:
+        engine = ContinuousEngine(cfg, params, n_slots=args.batch_slots,
+                                  max_seq=max_seq, eos_id=args.eos_id)
+        # SIGTERM = invoker preemption: hand partials back for resubmit()
+        signal.signal(signal.SIGTERM, lambda *_: (_drain_and_exit(engine)))
+        for i, p in enumerate(prompts):
+            engine.add(GenRequest(id=i, prompt=p, max_new=args.new_tokens))
+        done = engine.run()
+        n_tok = sum(len(r.generated) for r in done)
+        occ = engine.occupancy
     dt = time.time() - t0
-    n_tok = args.requests * args.new_tokens
-    print(f"served {args.requests} requests, {n_tok} tokens "
-          f"in {dt:.1f}s ({n_tok/dt:.1f} tok/s on CPU, reduced config)")
+    mode = "sequential" if args.sequential else \
+        f"continuous x{args.batch_slots} slots (occupancy {occ:.0%})"
+    print(f"served {len(done)} requests, {n_tok} tokens in {dt:.1f}s "
+          f"({n_tok/dt:.1f} tok/s on CPU, reduced config, {mode})")
+
+
+def _drain_and_exit(engine: ContinuousEngine):
+    partials = engine.drain()
+    print(f"SIGTERM: drained {len(partials)} in-flight requests "
+          f"({sum(len(p.generated) for p in partials)} partial tokens kept "
+          f"for resubmit)")
+    raise SystemExit(143)
 
 
 if __name__ == "__main__":

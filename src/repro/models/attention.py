@@ -229,30 +229,45 @@ def init_kv_cache_shape(cfg: ModelConfig, batch: int, seq_len: int):
 
 def gqa_decode(p, x, k_cache, v_cache, pos, cfg: ModelConfig):
     """One-token decode. x: (B,1,D); caches: (B,Sc,KV,Dh); pos: scalar int32
-    current position. Returns (out, new_k_cache, new_v_cache). For SWA the
-    cache is a ring buffer of width ``sliding_window``.
+    current position, or an (B,) int32 vector giving each batch row its own
+    position (continuous batching: every slot decodes at its own offset,
+    masked independently). Returns (out, new_k_cache, new_v_cache). For SWA
+    the cache is a ring buffer of width ``sliding_window``.
     """
     b = x.shape[0]
     dt = x.dtype
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim > 0
+    positions = pos[:, None] if per_row else jnp.full((b, 1), pos, jnp.int32)
     q, k, v = _project_qkv(p, x, cfg)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     s_cache = k_cache.shape[1]
     slot = pos % s_cache if cfg.sliding_window else pos
-    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), slot, 1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), slot, 1)
+    if per_row:
+        # each row writes its own cache line; OOB rows (clamped by callers)
+        # are dropped by the scatter rather than corrupting a neighbour
+        k_cache = k_cache.at[jnp.arange(b), slot].set(
+            k[:, 0].astype(k_cache.dtype), mode="drop")
+        v_cache = v_cache.at[jnp.arange(b), slot].set(
+            v[:, 0].astype(v_cache.dtype), mode="drop")
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), slot, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), slot, 1)
     k_cache = _shard(cfg, k_cache, BATCH_AXES, "model", None, None)
     v_cache = _shard(cfg, v_cache, BATCH_AXES, "model", None, None)
-    # positions held in each cache slot
+    # positions held in each cache slot, per batch row when pos is a vector
     idx = jnp.arange(s_cache)
+    row_pos = pos[:, None] if per_row else pos  # (B,1) | scalar
     if cfg.sliding_window:
         # ring: slot i holds position p such that p % Sc == i and p <= pos;
         # slots for positions < 0 have never been written -> masked out.
-        k_pos = pos - (pos % s_cache - idx) % s_cache
+        k_pos = row_pos - (row_pos % s_cache - idx) % s_cache
     else:
-        k_pos = idx
-    valid = (k_pos <= pos) & (k_pos >= 0)
+        k_pos = jnp.broadcast_to(idx, (b, s_cache)) if per_row else idx
+    valid = (k_pos <= row_pos) & (k_pos >= 0)   # (B,Sc) | (Sc,)
+    if not per_row:
+        valid = jnp.broadcast_to(valid, (b, s_cache))
     g = cfg.n_heads // cfg.n_kv_heads
     qh = q.reshape(b, 1, cfg.n_kv_heads, g, cfg.head_dim)
     scale = cfg.head_dim ** -0.5
@@ -261,7 +276,7 @@ def gqa_decode(p, x, k_cache, v_cache, pos, cfg: ModelConfig):
     # all-reduces instead of gathering the cache.
     scores = jnp.einsum("bqkgd,bskd->bkgqs", qh, k_cache.astype(dt)).astype(jnp.float32) * scale
     scores = _shard(cfg, scores, BATCH_AXES, None, None, None, "model")
-    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1).astype(dt)
     out = jnp.einsum("bkgqs,bskd->bqkgd", w, v_cache.astype(dt))
     out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
@@ -309,7 +324,8 @@ def mla_attention(p, x, positions, cfg: ModelConfig):
 
 
 def mla_decode(p, x, c_cache, pos, cfg: ModelConfig):
-    """Absorbed-matrix MLA decode over a compressed cache.
+    """Absorbed-matrix MLA decode over a compressed cache. ``pos`` is a
+    scalar int32 or an (B,) per-row position vector (continuous batching).
 
     Cache layout: (B, S, kv_lora_rank + qk_rope_dim) — c_kv ++ rope'd k_rope.
     The up-projections are absorbed into the query/output paths so decode cost
@@ -318,13 +334,19 @@ def mla_decode(p, x, c_cache, pos, cfg: ModelConfig):
     b = x.shape[0]
     dt = x.dtype
     r = cfg.kv_lora_rank
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim > 0
+    positions = pos[:, None] if per_row else jnp.full((b, 1), pos, jnp.int32)
     q_nope, q_rope = _mla_q(p, x, positions, cfg)  # (B,1,H,*)
     c_kv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(dt))
     k_rope = jnp.einsum("bsd,dr->bsr", x, p["w_krope"].astype(dt))
     k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
     entry = jnp.concatenate([c_kv, k_rope], axis=-1)
-    c_cache = jax.lax.dynamic_update_slice_in_dim(c_cache, entry.astype(c_cache.dtype), pos, 1)
+    if per_row:
+        c_cache = c_cache.at[jnp.arange(b), pos].set(
+            entry[:, 0].astype(c_cache.dtype), mode="drop")
+    else:
+        c_cache = jax.lax.dynamic_update_slice_in_dim(c_cache, entry.astype(c_cache.dtype), pos, 1)
     c_cache = _shard(cfg, c_cache, BATCH_AXES, "model", None)
     cache_c = c_cache[..., :r].astype(dt)      # (B,S,r)
     cache_rope = c_cache[..., r:].astype(dt)   # (B,S,rope)
@@ -335,8 +357,9 @@ def mla_decode(p, x, c_cache, pos, cfg: ModelConfig):
     scores = (jnp.einsum("bqhr,bsr->bhqs", q_abs, cache_c)
               + jnp.einsum("bqhd,bsd->bhqs", q_rope, cache_rope)).astype(jnp.float32) * scale
     scores = _shard(cfg, scores, BATCH_AXES, None, None, "model")
-    valid = jnp.arange(c_cache.shape[1]) <= pos
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    valid = jnp.arange(c_cache.shape[1]) <= (pos[:, None] if per_row else pos)
+    valid = jnp.broadcast_to(valid, (b, c_cache.shape[1]))
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1).astype(dt)
     ctx = jnp.einsum("bhqs,bsr->bqhr", w, cache_c)  # (B,1,H,r)
     w_uv = p["w_uv"].astype(dt).reshape(r, cfg.n_heads, cfg.v_head_dim)

@@ -5,7 +5,7 @@ Batch conventions (see also ``launch.dryrun.input_specs``):
             {"tokens": (B,S-F), "vision_embeds": (B,F,D), "labels": (B,S-F)} [vlm]
             {"frames": (B,S,D) bf16, "labels": (B,S) i32}        [audio]
   prefill : same inputs minus labels -> (logits_last, cache)
-  decode  : {"token": (B,1) i32, "cache": pytree, "pos": scalar} -> (logits, cache)
+  decode  : {"token": (B,1) i32, "cache": pytree, "pos": scalar | (B,)} -> (logits, cache)
 """
 from __future__ import annotations
 
@@ -103,7 +103,9 @@ def prefill(params, batch: Dict[str, Any], cfg: ModelConfig):
 
 
 def decode_step(params, token, cache, pos, cfg: ModelConfig):
-    """One decode step. token: (B,1) i32; pos: scalar i32 (current position).
+    """One decode step. token: (B,1) i32; pos: scalar i32 (current position)
+    or (B,) i32 vector of per-row positions (continuous batching: each batch
+    slot decodes at its own sequence offset with per-row masking).
     Returns (logits (B,Vpad) fp32, new_cache)."""
     x = embed_tokens(params["embed"], token, cfg)
     x, cache = transformer.stack_decode(params["stack"], x, cache, pos, cfg)

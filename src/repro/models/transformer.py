@@ -264,7 +264,9 @@ def _ssm_decode_body(p, x, state, conv, cfg: ModelConfig):
 
 
 def stack_decode(params, x, cache, pos, cfg: ModelConfig):
-    """One-token decode. x: (B,1,D); pos: scalar int32. -> (hidden, new_cache)."""
+    """One-token decode. x: (B,1,D); pos: scalar int32 OR (B,) int32 vector
+    (per-slot positions for continuous batching — each batch row attends at
+    its own offset). -> (hidden, new_cache)."""
     new_cache: Dict[str, Any] = {}
     for seg in segments_for(cfg):
         p = params[seg.name]

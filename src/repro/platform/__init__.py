@@ -19,7 +19,8 @@ from repro.platform.routers import (DeadlineAwareRouter, HashRouter,
                                     LeastLoadedRouter, LocalityRouter)
 from repro.platform.scalers import AdaptiveJobManager, JobManager
 from repro.platform.sources import SuiteLoad, UniformLoad
-from repro.platform.executors import ServingExecutor, SimExecutor
+from repro.platform.executors import (BatchedServingExecutor, ServingExecutor,
+                                      SimExecutor)
 from repro.platform import admission as _admission  # noqa: F401 (registers)
 from repro.platform import reliability as _reliability  # noqa: F401 (registers)
 from repro.platform.reliability import RetryPolicy
@@ -35,7 +36,7 @@ __all__ = [
     "DeadlineAwareRouter", "RetryPolicy",
     "JobManager", "AdaptiveJobManager",
     "UniformLoad", "SuiteLoad",
-    "SimExecutor", "ServingExecutor",
+    "SimExecutor", "ServingExecutor", "BatchedServingExecutor",
     "HarvestConfig", "HarvestResult", "HarvestRuntime", "Platform",
     "nan_to_none",
 ]

@@ -8,13 +8,23 @@ time; :class:`ServingExecutor` performs a real bounded decode on a
 seconds, which advance virtual time (the scheduling layer is oblivious —
 the paper's Sec. V-D setup).
 
-JAX (and the model zoo) are imported lazily inside the ``serving`` factory,
+:class:`BatchedServingExecutor` (registry key ``batched-serving``) is the
+continuous-batching variant: it exposes ``run_batch`` so the invoker hands it
+every request it admits in one pull, and all of them decode together on a
+:class:`repro.serving.engine.ContinuousEngine` — one batched decode per token
+wave instead of one full generate per request. Each request is charged its
+own completion latency inside the batch, so virtual time sees the real
+(shorter) wall clock the invoker spent. ``drain()`` parks partial
+generations keyed by request id; a resubmitted request resumes its decode.
+
+JAX (and the model zoo) are imported lazily inside the serving factories,
 so pure-simulation scenarios never pay the accelerator-stack import.
 """
 from __future__ import annotations
 
 import time
-from typing import TYPE_CHECKING
+import zlib
+from typing import Dict, List, TYPE_CHECKING
 
 import numpy as np
 
@@ -23,6 +33,15 @@ from repro.platform.registry import register
 if TYPE_CHECKING:
     from repro.core.queues import Request
     from repro.platform.runtime import Platform
+
+
+def prompt_for_fn(fn: str, vocab_size: int, prompt_len: int) -> List[int]:
+    """Deterministic prompt for a FaaS function name. Seeded with a stable
+    digest (crc32), NOT ``hash()``: Python string hashing is randomized per
+    process (PYTHONHASHSEED), which would silently break the 'reproducible
+    decode' contract across invoker restarts."""
+    rng = np.random.default_rng(zlib.crc32(fn.encode()))
+    return rng.integers(0, vocab_size, size=prompt_len).astype(int).tolist()
 
 
 class SimExecutor:
@@ -34,8 +53,8 @@ class SimExecutor:
 
 class ServingExecutor:
     """Real JAX execution: a bounded ``generate`` call on a serving engine;
-    the function name seeds the prompt so each FaaS function is a distinct,
-    reproducible decode."""
+    the function name seeds the prompt (stable digest) so each FaaS function
+    is a distinct, reproducible decode."""
 
     def __init__(self, engine, prompt_len: int = 16, n_new: int = 8):
         self.engine = engine
@@ -43,12 +62,107 @@ class ServingExecutor:
         self.n_new = n_new
 
     def __call__(self, req: "Request") -> float:
-        rng = np.random.default_rng(abs(hash(req.fn)) % (2 ** 31))
-        prompt = rng.integers(0, self.engine.cfg.vocab_size,
-                              size=(1, self.prompt_len)).astype(np.int32)
+        prompt = np.asarray([prompt_for_fn(req.fn, self.engine.cfg.vocab_size,
+                                           self.prompt_len)], np.int32)
         t0 = time.perf_counter()
         self.engine.generate(prompt, self.n_new)
         return time.perf_counter() - t0
+
+
+class BatchedServingExecutor:
+    """Continuous-batching execution: concurrent in-flight requests on an
+    invoker share one :class:`ContinuousEngine` instead of serializing
+    through per-request ``generate`` calls.
+
+    The invoker detects ``run_batch`` and hands over every request admitted
+    in one pull loop; per-request cost is the request's real completion
+    latency inside the batched run. Two preemption hand-off paths park
+    partial generations so a resubmitted request (same id) RESUMES instead
+    of restarting from token 0: ``drain()`` for a live engine interrupted
+    mid-decode (real-serving SIGTERM), and ``note_preempt`` — called by
+    :meth:`Invoker.sigterm`'s requeue path — which keeps the prefix of the
+    already-decoded stream proportional to the virtual seconds the doomed
+    invocation actually ran (the drained worker hands those tokens back).
+    """
+
+    _RESULTS_CAP = 8192   # decoded streams kept for preemption hand-off
+
+    def __init__(self, engine, prompt_len: int = 16, n_new: int = 8,
+                 resume_bucket: int = 4):
+        from repro.serving.engine import ContinuousEngine
+        assert isinstance(engine, ContinuousEngine), type(engine)
+        self.engine = engine
+        self.prompt_len = prompt_len
+        self.n_new = n_new
+        # parked partials are truncated to a multiple of this, so admission
+        # context lengths stay in a small fixed set (each distinct length
+        # retraces the engine's jitted prefill — unbucketed resumes would
+        # compile inside the timed serve() loop and inflate charged latency)
+        self.resume_bucket = max(resume_bucket, 1)
+        self._partials: Dict[int, List[int]] = {}  # req.id -> parked tokens
+        # req.id -> (decoded stream, tokens already banked before that run)
+        self._results: Dict[int, tuple] = {}
+        self.last_results: Dict[int, List[int]] = {}  # last batch's tokens
+
+    def run_batch(self, reqs: List["Request"]) -> List[float]:
+        """Decode every request together; returns per-request wall seconds
+        (completion latency inside the batch, prefill included)."""
+        from repro.serving.batching import GenRequest
+        eng = self.engine
+        gens = [GenRequest(id=req.id,
+                           prompt=prompt_for_fn(req.fn, eng.cfg.vocab_size,
+                                                self.prompt_len),
+                           max_new=self.n_new,
+                           generated=self._partials.pop(req.id, []))
+                for req in reqs]
+        banked = {g.id: len(g.generated) for g in gens}
+        finished_at = eng.serve(gens)
+        self.last_results = {f.id: list(f.generated)
+                             for f in eng.batcher.finished}
+        eng.batcher.finished.clear()
+        for rid, toks in self.last_results.items():
+            self._results.pop(rid, None)   # move-to-end: keep live ids fresh
+            self._results[rid] = (toks, banked.get(rid, 0))
+        while len(self._results) > self._RESULTS_CAP:   # evict oldest
+            self._results.pop(next(iter(self._results)))
+        return [finished_at[req.id] for req in reqs]
+
+    def __call__(self, req: "Request") -> float:
+        return self.run_batch([req])[0]
+
+    def note_preempt(self, req: "Request", elapsed: float, total: float):
+        """Invoker preemption hand-off (virtual time): the invocation ran
+        ``elapsed`` of its ``total`` virtual seconds before the requeue.
+        Tokens banked by an earlier drain survive unconditionally; of the
+        tokens THIS invocation owed, the elapsed fraction survives (an
+        approximation — ``total`` also carries dispatch overhead/cold
+        start, slightly under-crediting short invocations)."""
+        entry = self._results.get(req.id)
+        if entry is None or total <= 0:
+            return
+        toks, base = entry
+        frac = min(max(elapsed / total, 0.0), 1.0)
+        keep = base + int((len(toks) - base) * frac)
+        if keep:
+            self._park(req.id, list(toks[:keep]))
+
+    def _park(self, rid: int, toks: List[int]) -> bool:
+        toks = toks[:len(toks) - len(toks) % self.resume_bucket]
+        if not toks:
+            return False
+        self._partials.pop(rid, None)      # move-to-end: keep live ids fresh
+        self._partials[rid] = toks
+        while len(self._partials) > self._RESULTS_CAP:  # evict oldest:
+            # never-resumed requests (timed out / lost) must not pile up
+            self._partials.pop(next(iter(self._partials)))
+        return True
+
+    def drain(self) -> int:
+        """SIGTERM hand-off for a live engine interrupted mid-decode: park
+        every unfinished request's partial tokens (truncated to the resume
+        bucket) for resumption on resubmit. Returns how many were parked."""
+        return sum(self._park(gr.id, list(gr.generated))
+                   for gr in self.engine.drain())
 
 
 @register("executor", "sim")
@@ -56,20 +170,39 @@ def build_sim(platform: "Platform", **params) -> SimExecutor:
     return SimExecutor(**params)
 
 
+def _smoke_engine(arch: str, init_seed: int, max_seq: int, continuous: bool,
+                  **engine_params):
+    import jax  # deferred: only real-JAX scenarios pay this import
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving.engine import ContinuousEngine, ServingEngine
+    cfg = get_config(arch, smoke=True)
+    model_params = init_params(jax.random.PRNGKey(init_seed), cfg)
+    if continuous:
+        return ContinuousEngine(cfg, model_params, max_seq=max_seq,
+                                **engine_params)
+    return ServingEngine(cfg, model_params, max_seq=max_seq)
+
+
 @register("executor", "serving")
 def build_serving(platform: "Platform", *, engine=None, arch: str = "qwen2.5-3b",
                   max_seq: int = 64, init_seed: int = 0,
                   **params) -> ServingExecutor:
     if engine is None:
-        import jax  # deferred: only real-JAX scenarios pay this import
-
-        from repro.configs import get_config
-        from repro.models import init_params
-        from repro.serving.engine import ServingEngine
-        cfg = get_config(arch, smoke=True)
-        model_params = init_params(jax.random.PRNGKey(init_seed), cfg)
-        engine = ServingEngine(cfg, model_params, max_seq=max_seq)
+        engine = _smoke_engine(arch, init_seed, max_seq, continuous=False)
     return ServingExecutor(engine, **params)
+
+
+@register("executor", "batched-serving")
+def build_batched_serving(platform: "Platform", *, engine=None,
+                          arch: str = "qwen2.5-3b", max_seq: int = 64,
+                          init_seed: int = 0, n_slots: int = 4,
+                          **params) -> BatchedServingExecutor:
+    if engine is None:
+        engine = _smoke_engine(arch, init_seed, max_seq, continuous=True,
+                               n_slots=n_slots)
+    return BatchedServingExecutor(engine, **params)
 
 
 def as_executor(obj):
@@ -80,5 +213,6 @@ def as_executor(obj):
     raise TypeError(f"executor override must be callable, got {type(obj)!r}")
 
 
-__all__ = ["SimExecutor", "ServingExecutor", "as_executor", "build_sim",
-           "build_serving"]
+__all__ = ["SimExecutor", "ServingExecutor", "BatchedServingExecutor",
+           "prompt_for_fn", "as_executor", "build_sim", "build_serving",
+           "build_batched_serving"]
