@@ -65,6 +65,7 @@ def main() -> None:
 
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
     from benchmarks import multi_tenant as MT
+    from benchmarks import paged_kv as PK
     from benchmarks import paper_benches as PB
     from benchmarks import reliability as RL
     from benchmarks import routing as RT
@@ -90,6 +91,9 @@ def main() -> None:
         "serving": lambda: SB.bench_serving(
             n_requests=8 if args.smoke else 16, n_new=8 if args.smoke else 16,
             repeats=2 if args.smoke else 3),
+        "paged_kv": lambda: PK.bench_paged_kv(
+            n_requests=12 if args.smoke else 24,
+            kernel_requests=4 if args.smoke else 6),
         "roofline": bench_roofline_summary,
     }
     if args.list:

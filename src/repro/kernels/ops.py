@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.paged_attention import paged_attention
 from repro.kernels.rmsnorm import rmsnorm
 from repro.kernels.ssd import ssd
 
@@ -24,6 +25,13 @@ def flash_attention_op(q, k, v, *, causal=True, window=None, scale=None,
                        block_q=128, block_k=128, interpret=None):
     return flash_attention(q, k, v, causal=causal, window=window, scale=scale,
                            block_q=block_q, block_k=block_k,
+                           interpret=_default_interpret() if interpret is None else interpret)
+
+
+def paged_attention_op(q, k_pool, v_pool, block_tables, context_lens, *,
+                       scale=None, interpret=None):
+    return paged_attention(q, k_pool, v_pool, block_tables, context_lens,
+                           scale=scale,
                            interpret=_default_interpret() if interpret is None else interpret)
 
 

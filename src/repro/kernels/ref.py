@@ -43,6 +43,36 @@ def flash_attention_ref(q, k, v, *, causal: bool = True,
     return out.reshape(b, h, sq, d).astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pool, v_pool, block_tables, context_lens, *,
+                        scale: Optional[float] = None):
+    """Decode-time paged attention over a block-paged KV pool.
+
+    q: (B,H,D) — one query token per sequence, H % KV == 0;
+    k_pool/v_pool: (NB,BS,KV,D) — fixed-size KV blocks, any sequence's K/V
+    reachable only through its block table; block_tables: (B,MAXB) int32
+    (padding entries may point at any block — they are masked out);
+    context_lens: (B,) int32 — valid positions per sequence INCLUDING the
+    token that produced q (whose K/V must already be in the pool).
+    Returns (B,H,D).
+    """
+    b, h, d = q.shape
+    bs, kv = k_pool.shape[1], k_pool.shape[2]
+    maxb = block_tables.shape[1]
+    g = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    k = k_pool[block_tables].reshape(b, maxb * bs, kv, d)
+    v = v_pool[block_tables].reshape(b, maxb * bs, kv, d)
+    qg = q.reshape(b, kv, g, d)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    pos = jnp.arange(maxb * bs)[None, :]
+    valid = pos < context_lens[:, None]                    # (B,S)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
 def moe_gmm_ref(lhs, rhs, group_sizes):
     """Grouped matmul. lhs: (T,D) rows sorted by group; rhs: (E,D,F);
     group_sizes: (E,) int32 summing to <= T (tail rows multiply by group E-1's

@@ -284,6 +284,33 @@ def gqa_decode(p, x, k_cache, v_cache, pos, cfg: ModelConfig):
     return out, k_cache, v_cache
 
 
+def paged_gqa_decode(p, x, k_pool, v_pool, tables, pos, bids, offs,
+                     cfg: ModelConfig, interpret: bool = False):
+    """One-token decode against a block-paged KV pool (single layer), using
+    the Pallas paged-attention kernel. x: (B,1,D); k_pool/v_pool:
+    (NB,BS,KV,Dh) physical blocks; tables: (B,MAXB) int32 per-row block
+    tables; pos: (B,) int32 position of the incoming token; bids/offs: (B,)
+    int32 physical slot (block id, in-block offset) where this token's K/V
+    must land (reserved by the block allocator — the kernel then sees
+    ``context_lens = pos + 1`` valid positions). Returns
+    (out, k_pool, v_pool).
+    """
+    from repro.kernels.paged_attention import paged_attention
+    b = x.shape[0]
+    dt = x.dtype
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None]
+    q, k, v = _project_qkv(p, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    k_pool = k_pool.at[bids, offs].set(k[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[bids, offs].set(v[:, 0].astype(v_pool.dtype))
+    out = paged_attention(q[:, 0], k_pool, v_pool, tables, pos + 1,
+                          interpret=interpret)         # (B,H,Dh)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim).astype(dt)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(dt)), k_pool, v_pool
+
+
 # --- MLA ---------------------------------------------------------------------
 def _mla_q(p, x, positions, cfg: ModelConfig):
     b, s, _ = x.shape

@@ -114,6 +114,36 @@ def decode_step(params, token, cache, pos, cfg: ModelConfig):
     return logits[:, 0], cache
 
 
+def paged_decode_step(params, token, k_pools, v_pools, tables, pos, bids,
+                      offs, cfg: ModelConfig, interpret: bool = False):
+    """One decode step against block-paged KV pools (the Pallas fast path of
+    :class:`repro.serving.engine.PagedContinuousEngine`). Only defined for
+    single-segment GQA models (see ``repro.serving.kvcache.paged_compatible``).
+
+    token: (B,1) i32; k_pools/v_pools: (L,NB,BS,KV,Dh); tables: (B,MAXB) i32;
+    pos: (B,) i32 incoming-token positions; bids/offs: (B,) i32 physical
+    write slots. Returns (logits (B,Vpad) fp32, k_pools, v_pools)."""
+    from repro.models import attention as attn_mod
+    segs = transformer.segments_for(cfg)
+    assert len(segs) == 1 and segs[0].kind == "dense", segs
+    x = embed_tokens(params["embed"], token, cfg)
+    stack = params["stack"][segs[0].name]
+
+    def body(h, xs):
+        lp, kp, vp = xs
+        a, kp, vp = attn_mod.paged_gqa_decode(
+            lp["attn"], transformer._norm(h, lp["ln1"], cfg), kp, vp,
+            tables, pos, bids, offs, cfg, interpret)
+        h = transformer._ffn_decode(lp, h + a, cfg)
+        return h, (kp, vp)
+
+    x, (kps, vps) = jax.lax.scan(body, x, (stack, k_pools, v_pools),
+                                 unroll=(cfg.n_layers if cfg.unroll else 1))
+    x = transformer._norm(x, params["final_norm"], cfg)
+    logits = logits_from_hidden(_head_weight(params, cfg), x, cfg)
+    return logits[:, 0], kps, vps
+
+
 # --- cache construction ---------------------------------------------------------
 def cache_spec(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
     """ShapeDtypeStruct pytree for a decode cache of capacity ``seq_len``."""

@@ -35,13 +35,40 @@ if TYPE_CHECKING:
     from repro.platform.runtime import Platform
 
 
-def prompt_for_fn(fn: str, vocab_size: int, prompt_len: int) -> List[int]:
+def tenant_of(fn: str) -> str:
+    """Tenant owning a FaaS function: the name minus its variant suffix
+    (``"img-resize-3" -> "img-resize"``); suffix-less names are their own
+    tenant."""
+    return fn.rsplit("-", 1)[0] if "-" in fn else fn
+
+
+def tenant_prefix(tenant: str, vocab_size: int, prefix_len: int) -> List[int]:
+    """Deterministic shared system prefix for a tenant (crc32-seeded, same
+    stability contract as :func:`prompt_for_fn`)."""
+    rng = np.random.default_rng(zlib.crc32(b"prefix:" + tenant.encode()))
+    return rng.integers(0, vocab_size, size=prefix_len).astype(int).tolist()
+
+
+def prompt_for_fn(fn: str, vocab_size: int, prompt_len: int,
+                  prefix_len: int = 0, tenant: str = None) -> List[int]:
     """Deterministic prompt for a FaaS function name. Seeded with a stable
     digest (crc32), NOT ``hash()``: Python string hashing is randomized per
     process (PYTHONHASHSEED), which would silently break the 'reproducible
-    decode' contract across invoker restarts."""
+    decode' contract across invoker restarts.
+
+    With ``prefix_len > 0`` the first ``prefix_len`` tokens are the tenant's
+    shared system prefix (:func:`tenant_prefix`) — every function of one
+    tenant starts with the same tokens, so a paged engine prefills the
+    prefix once and forks it. Total length stays ``prompt_len``; the default
+    ``prefix_len=0`` output is unchanged."""
     rng = np.random.default_rng(zlib.crc32(fn.encode()))
-    return rng.integers(0, vocab_size, size=prompt_len).astype(int).tolist()
+    body = rng.integers(0, vocab_size, size=prompt_len).astype(int).tolist()
+    if prefix_len <= 0:
+        return body
+    assert prefix_len < prompt_len, (prefix_len, prompt_len)
+    pre = tenant_prefix(tenant if tenant is not None else tenant_of(fn),
+                        vocab_size, prefix_len)
+    return pre + body[prefix_len:]
 
 
 class SimExecutor:
@@ -88,12 +115,15 @@ class BatchedServingExecutor:
     _RESULTS_CAP = 8192   # decoded streams kept for preemption hand-off
 
     def __init__(self, engine, prompt_len: int = 16, n_new: int = 8,
-                 resume_bucket: int = 4):
+                 resume_bucket: int = 4, prefix_len: int = 0):
         from repro.serving.engine import ContinuousEngine
         assert isinstance(engine, ContinuousEngine), type(engine)
         self.engine = engine
         self.prompt_len = prompt_len
         self.n_new = n_new
+        # tenant system-prefix tokens at the head of every prompt; a paged
+        # engine prefills each tenant's prefix once and forks it per request
+        self.prefix_len = prefix_len
         # parked partials are truncated to a multiple of this, so admission
         # context lengths stay in a small fixed set (each distinct length
         # retraces the engine's jitted prefill — unbucketed resumes would
@@ -109,9 +139,14 @@ class BatchedServingExecutor:
         (completion latency inside the batch, prefill included)."""
         from repro.serving.batching import GenRequest
         eng = self.engine
+        if self.prefix_len > 0:
+            for t in sorted({tenant_of(req.fn) for req in reqs}):
+                eng.register_prefix(
+                    tenant_prefix(t, eng.cfg.vocab_size, self.prefix_len))
         gens = [GenRequest(id=req.id,
                            prompt=prompt_for_fn(req.fn, eng.cfg.vocab_size,
-                                                self.prompt_len),
+                                                self.prompt_len,
+                                                self.prefix_len),
                            max_new=self.n_new,
                            generated=self._partials.pop(req.id, []))
                 for req in reqs]
@@ -171,17 +206,18 @@ def build_sim(platform: "Platform", **params) -> SimExecutor:
 
 
 def _smoke_engine(arch: str, init_seed: int, max_seq: int, continuous: bool,
-                  **engine_params):
+                  paged: bool = False, **engine_params):
     import jax  # deferred: only real-JAX scenarios pay this import
 
     from repro.configs import get_config
     from repro.models import init_params
-    from repro.serving.engine import ContinuousEngine, ServingEngine
+    from repro.serving.engine import (ContinuousEngine,
+                                      PagedContinuousEngine, ServingEngine)
     cfg = get_config(arch, smoke=True)
     model_params = init_params(jax.random.PRNGKey(init_seed), cfg)
     if continuous:
-        return ContinuousEngine(cfg, model_params, max_seq=max_seq,
-                                **engine_params)
+        cls = PagedContinuousEngine if paged else ContinuousEngine
+        return cls(cfg, model_params, max_seq=max_seq, **engine_params)
     return ServingEngine(cfg, model_params, max_seq=max_seq)
 
 
@@ -194,14 +230,45 @@ def build_serving(platform: "Platform", *, engine=None, arch: str = "qwen2.5-3b"
     return ServingExecutor(engine, **params)
 
 
+_KV_GAUGES = ("blocks_in_use", "blocks_high_water", "bytes_in_use",
+              "pool_bytes", "prefill_tokens", "share_hit_rate")
+
+
+def _register_kv_gauges(platform: "Platform", engine):
+    """Callback gauges over the engine's KV accounting (both layouts expose
+    the same keys, so dashboards compare dense vs paged one-to-one)."""
+    if platform is None or getattr(platform, "metrics", None) is None:
+        return
+    layout = engine.kv_stats()["layout"]
+    for key in _KV_GAUGES:
+        platform.metrics.gauge(f"kv_{key}",
+                               fn=(lambda k=key: engine.kv_stats()[k]),
+                               layout=layout)
+
+
 @register("executor", "batched-serving")
 def build_batched_serving(platform: "Platform", *, engine=None,
                           arch: str = "qwen2.5-3b", max_seq: int = 64,
                           init_seed: int = 0, n_slots: int = 4,
+                          kv_layout: str = None, block_size: int = 16,
+                          n_blocks: int = None, attn: str = "gather",
                           **params) -> BatchedServingExecutor:
+    """``kv_layout`` (param > scenario ``platform.kv_layout`` > dense) picks
+    the engine's KV cache: ``dense`` reserves ``n_slots x max_seq`` rows,
+    ``paged`` shares a block pool (``block_size``/``n_blocks``/``attn`` are
+    paged-only tuning; ``attn="kernel"`` runs the Pallas paged kernel)."""
+    if kv_layout is None:
+        sc = getattr(platform, "scenario", None)
+        kv_layout = getattr(getattr(sc, "platform", None), "kv_layout",
+                            None) or "dense"
+    assert kv_layout in ("dense", "paged"), kv_layout
     if engine is None:
+        paged_kw = (dict(block_size=block_size, n_blocks=n_blocks, attn=attn)
+                    if kv_layout == "paged" else {})
         engine = _smoke_engine(arch, init_seed, max_seq, continuous=True,
-                               n_slots=n_slots)
+                               paged=(kv_layout == "paged"),
+                               n_slots=n_slots, **paged_kw)
+    _register_kv_gauges(platform, engine)
     return BatchedServingExecutor(engine, **params)
 
 
@@ -214,5 +281,5 @@ def as_executor(obj):
 
 
 __all__ = ["SimExecutor", "ServingExecutor", "BatchedServingExecutor",
-           "prompt_for_fn", "as_executor", "build_sim", "build_serving",
-           "build_batched_serving"]
+           "prompt_for_fn", "tenant_of", "tenant_prefix", "as_executor",
+           "build_sim", "build_serving", "build_batched_serving"]

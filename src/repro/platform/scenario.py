@@ -93,6 +93,7 @@ class PlatformSection:
     router: str = "hash"                # router registry key
     admission: str = "none"             # none | slo
     executor: str = "sim"               # executor registry key
+    kv_layout: str = "dense"            # serving KV cache: dense | paged
     queue_depth_soft_limit: int = 64
     router_params: Dict[str, Any] = dataclasses.field(default_factory=dict)
     admission_params: Dict[str, Any] = dataclasses.field(default_factory=dict)

@@ -1,0 +1,333 @@
+"""Block-paged KV cache with ref-counted copy-on-write prefix sharing.
+
+The dense ``ContinuousEngine`` reserves ``n_slots x max_seq`` cache rows up
+front, so slot count — how many harvested-window users one invoker serves —
+is bounded by the *longest possible* sequence. This module provides the
+vLLM-style alternative: K/V live in fixed-size blocks of one preallocated
+pool, each sequence holds a table of block ids, and a free-list allocator
+returns blocks the moment a slot is released. Ref-counting lets many
+sequences reference the same physical blocks (a per-tenant system prefix is
+prefilled once and forked into every request that shares it); a write into a
+shared block triggers copy-on-write.
+
+Two layers:
+
+:class:`BlockAllocator`
+    pure host-side bookkeeping (free list, refcounts, per-sequence tables) —
+    no JAX imports, so conservation properties are fuzz-testable in the fast
+    tier. ``check()`` asserts the invariants (refcount == table references,
+    free list == refcount-0 blocks, no duplicates).
+:class:`PagedKVCache`
+    owns the device pools ``(L, n_blocks, block_size, KV, Dh)`` and performs
+    the actual gathers/scatters/COW copies. The paged layout is only defined
+    for single-segment GQA caches (``paged_compatible``); MLA / SSM / ring
+    caches keep the dense path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Hashable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+class OutOfBlocks(RuntimeError):
+    """The pool has no free block — callers queue or preempt, never corrupt."""
+
+
+class BlockAllocator:
+    """Host-side free-list allocator with ref-counted block sharing.
+
+    A *sequence* (any hashable key) owns an ordered block table; position
+    ``p`` of the sequence lives in ``table[p // block_size]`` at offset
+    ``p % block_size``. ``fork`` makes a new sequence share a prefix of an
+    existing one by increfing its blocks; ``append_pos`` reserves the next
+    position and reports when the caller must copy a shared block first
+    (copy-on-write).
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        assert n_blocks >= 1 and block_size >= 1
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self.refcount = np.zeros(n_blocks, np.int64)
+        self.free_list: List[int] = list(range(n_blocks - 1, -1, -1))
+        self.tables: Dict[Hashable, List[int]] = {}
+        self.lengths: Dict[Hashable, int] = {}
+        self.high_water = 0     # max blocks ever simultaneously in use
+        self.cow_copies = 0
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.n_blocks - len(self.free_list)
+
+    def alloc_block(self) -> int:
+        if not self.free_list:
+            raise OutOfBlocks(f"pool of {self.n_blocks} blocks exhausted")
+        bid = self.free_list.pop()
+        assert self.refcount[bid] == 0, bid
+        self.refcount[bid] = 1
+        self.high_water = max(self.high_water, self.blocks_in_use)
+        return bid
+
+    def decref(self, bid: int):
+        assert self.refcount[bid] > 0, f"double free of block {bid}"
+        self.refcount[bid] -= 1
+        if self.refcount[bid] == 0:
+            self.free_list.append(bid)
+
+    # --- sequence lifecycle ---------------------------------------------------
+    def create(self, seq: Hashable):
+        assert seq not in self.tables, seq
+        self.tables[seq] = []
+        self.lengths[seq] = 0
+
+    def free(self, seq: Hashable):
+        for bid in self.tables.pop(seq):
+            self.decref(bid)
+        del self.lengths[seq]
+
+    def fork(self, src: Hashable, dst: Hashable,
+             n_tokens: Optional[int] = None):
+        """``dst`` shares ``src``'s first ``n_tokens`` positions (default:
+        all of them) by referencing the same physical blocks — no copy. A
+        later append into a shared (partial) last block copy-on-writes."""
+        n = self.lengths[src] if n_tokens is None else n_tokens
+        assert 0 <= n <= self.lengths[src], (n, self.lengths[src])
+        self.create(dst)
+        nb = -(-n // self.block_size)
+        for bid in self.tables[src][:nb]:
+            self.refcount[bid] += 1
+            self.tables[dst].append(bid)
+        self.lengths[dst] = n
+
+    def append_pos(self, seq: Hashable) -> Tuple[int, int, Optional[int]]:
+        """Reserve the next position of ``seq``. Returns ``(bid, off,
+        cow_src)``; when ``cow_src`` is not None the caller must copy that
+        block's payload into ``bid`` before writing (the block was shared)."""
+        off = self.lengths[seq] % self.block_size
+        table = self.tables[seq]
+        cow_src = None
+        if off == 0:
+            table.append(self.alloc_block())
+        elif self.refcount[table[-1]] > 1:
+            cow_src = table[-1]
+            table[-1] = self.alloc_block()
+            self.decref(cow_src)
+            self.cow_copies += 1
+        self.lengths[seq] += 1
+        return table[-1], off, cow_src
+
+    def trim(self, seq: Hashable, n_tokens: int):
+        """Drop positions past ``n_tokens`` (resume-bucket truncation on a
+        parked sequence), releasing now-unreferenced trailing blocks."""
+        assert 0 <= n_tokens <= self.lengths[seq], (n_tokens, self.lengths[seq])
+        nb = -(-n_tokens // self.block_size)
+        table = self.tables[seq]
+        while len(table) > nb:
+            self.decref(table.pop())
+        self.lengths[seq] = n_tokens
+
+    # --- invariants -----------------------------------------------------------
+    def check(self):
+        """Conservation: every block is either free or referenced, exactly
+        refcount times, and the free list holds no duplicates."""
+        refs = np.zeros(self.n_blocks, np.int64)
+        for table in self.tables.values():
+            for bid in table:
+                refs[bid] += 1
+        assert np.array_equal(refs, self.refcount), \
+            (refs.tolist(), self.refcount.tolist())
+        free = sorted(self.free_list)
+        assert len(set(free)) == len(free), "duplicate free-list entries"
+        assert free == np.flatnonzero(self.refcount == 0).tolist(), \
+            (free, np.flatnonzero(self.refcount == 0).tolist())
+        for seq, table in self.tables.items():
+            need = -(-self.lengths[seq] // self.block_size)
+            assert len(table) == need, (seq, len(table), need)
+
+
+def paged_compatible(cfg: ModelConfig) -> bool:
+    """The paged layout covers single-segment GQA token caches only: MLA's
+    compressed cache, SSM/hybrid state, sliding-window rings, and non-token
+    frontends keep the dense path."""
+    return (cfg.family == "dense" and not cfg.use_mla
+            and cfg.sliding_window is None and cfg.frontend is None
+            and cfg.is_autoregressive)
+
+
+# --- jitted device ops (shared across managers) -------------------------------
+@functools.lru_cache(maxsize=None)
+def _device_ops():
+    """Lazily-built jitted pool ops, so importing this module (e.g. for the
+    fast-tier allocator fuzz tests) never pays the JAX import."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def copy_block(pool, src, dst):
+        return pool.at[:, dst].set(pool[:, src])
+
+    @jax.jit
+    def scatter_blocks(pool, bids, blocks):
+        return pool.at[:, bids].set(blocks.astype(pool.dtype))
+
+    @jax.jit
+    def scatter_tokens(pool, bids, offs, ent):
+        # ent: (L, B, KV, Dh) -> pool[:, bids[i], offs[i]] per batch row
+        return pool.at[:, bids, offs].set(ent.astype(pool.dtype))
+
+    @functools.partial(jax.jit, static_argnames=("s_max",))
+    def gather_dense(pool, tables, s_max):
+        # pool (L,NB,BS,KV,Dh), tables (B,MAXB) -> (L,B,s_max,KV,Dh)
+        l, _, bs = pool.shape[0], pool.shape[1], pool.shape[2]
+        b, maxb = tables.shape
+        out = pool[:, tables].reshape(l, b, maxb * bs, *pool.shape[3:])
+        return out[:, :, :s_max]
+
+    return dict(copy_block=copy_block, scatter_blocks=scatter_blocks,
+                scatter_tokens=scatter_tokens, gather_dense=gather_dense,
+                jnp=jnp)
+
+
+class PagedKVCache:
+    """Device-side paged KV pool for a single-segment GQA model.
+
+    Pools are ``(n_layers, n_blocks, block_size, n_kv_heads, head_dim)``;
+    an extra *null* block (owned by the reserved ``"__null__"`` sequence) is
+    allocated at construction so inactive batch rows always have a valid
+    write target and block tables a harmless padding id — its contents are
+    garbage and always masked.
+    """
+
+    NULL_SEQ = "__null__"
+
+    def __init__(self, cfg: ModelConfig, n_blocks: int, block_size: int,
+                 dtype=None):
+        assert paged_compatible(cfg), \
+            f"paged KV layout not defined for family={cfg.family!r}"
+        ops = _device_ops()
+        jnp = ops["jnp"]
+        self.cfg = cfg
+        self.block_size = block_size
+        self.n_blocks = n_blocks
+        dt = dtype or cfg.compute_dtype
+        shape = (cfg.n_layers, n_blocks, block_size, cfg.n_kv_heads,
+                 cfg.head_dim)
+        self.k_pool = jnp.zeros(shape, dt)
+        self.v_pool = jnp.zeros(shape, dt)
+        self.alloc = BlockAllocator(n_blocks, block_size)
+        self.alloc.create(self.NULL_SEQ)
+        self.null_block, _, _ = self.alloc.append_pos(self.NULL_SEQ)
+        self._ops = ops
+
+    # --- accounting -----------------------------------------------------------
+    @property
+    def block_bytes(self) -> int:
+        """Bytes per block across both pools and all layers."""
+        per = self.k_pool.dtype.itemsize
+        l, _, bs, kv, dh = self.k_pool.shape
+        return 2 * l * bs * kv * dh * per
+
+    @property
+    def pool_bytes(self) -> int:
+        return self.n_blocks * self.block_bytes
+
+    def stats(self) -> Dict[str, float]:
+        a = self.alloc
+        return {
+            "blocks_total": self.n_blocks,
+            "blocks_in_use": a.blocks_in_use,
+            "blocks_high_water": a.high_water,
+            "bytes_in_use": a.blocks_in_use * self.block_bytes,
+            "bytes_high_water": a.high_water * self.block_bytes,
+            "pool_bytes": self.pool_bytes,
+            "cow_copies": a.cow_copies,
+        }
+
+    # --- lifecycle (delegates + device effects) -------------------------------
+    def create(self, seq: Hashable):
+        self.alloc.create(seq)
+
+    def free(self, seq: Hashable):
+        self.alloc.free(seq)
+
+    def fork(self, src: Hashable, dst: Hashable,
+             n_tokens: Optional[int] = None):
+        self.alloc.fork(src, dst, n_tokens)
+
+    def trim(self, seq: Hashable, n_tokens: int):
+        self.alloc.trim(seq, n_tokens)
+
+    def length(self, seq: Hashable) -> int:
+        return self.alloc.lengths[seq]
+
+    def append(self, seq: Hashable) -> Tuple[int, int]:
+        """Reserve the next position, performing the COW device copy when the
+        tail block is shared. Returns ``(bid, off)`` for the token write."""
+        bid, off, cow_src = self.alloc.append_pos(seq)
+        if cow_src is not None:
+            ops = self._ops
+            self.k_pool = ops["copy_block"](self.k_pool, cow_src, bid)
+            self.v_pool = ops["copy_block"](self.v_pool, cow_src, bid)
+        return bid, off
+
+    def write_prefill(self, seq: Hashable, k, v):
+        """Store a fresh prefill's K/V. k, v: (L, S, KV, Dh) for positions
+        0..S-1 of ``seq`` (which must be empty)."""
+        ops = self._ops
+        jnp = ops["jnp"]
+        s = k.shape[1]
+        assert s >= 1 and self.alloc.lengths[seq] == 0, (s, seq)
+        nb = -(-s // self.block_size)
+        if len(self.alloc.free_list) < nb:
+            raise OutOfBlocks(f"need {nb} blocks, "
+                              f"{len(self.alloc.free_list)} free")
+        bids = [self.alloc.alloc_block() for _ in range(nb)]
+        self.alloc.tables[seq].extend(bids)
+        self.alloc.lengths[seq] = s
+        pad = nb * self.block_size - s
+        if pad:
+            spec = ((0, 0), (0, pad), (0, 0), (0, 0))
+            k = jnp.pad(k, spec)
+            v = jnp.pad(v, spec)
+        kb = k.reshape(k.shape[0], nb, self.block_size, *k.shape[2:])
+        vb = v.reshape(v.shape[0], nb, self.block_size, *v.shape[2:])
+        ids = jnp.asarray(bids, jnp.int32)
+        self.k_pool = ops["scatter_blocks"](self.k_pool, ids, kb)
+        self.v_pool = ops["scatter_blocks"](self.v_pool, ids, vb)
+
+    def write_tokens(self, bids: np.ndarray, offs: np.ndarray, k_ent, v_ent):
+        """Scatter one K/V entry per batch row: entries (L, B, KV, Dh) land
+        at ``pool[:, bids[i], offs[i]]`` (slots from :meth:`append`)."""
+        ops = self._ops
+        jnp = ops["jnp"]
+        bids = jnp.asarray(bids, jnp.int32)
+        offs = jnp.asarray(offs, jnp.int32)
+        self.k_pool = ops["scatter_tokens"](self.k_pool, bids, offs, k_ent)
+        self.v_pool = ops["scatter_tokens"](self.v_pool, bids, offs, v_ent)
+
+    # --- reads ----------------------------------------------------------------
+    def table_array(self, seqs: List[Hashable], width: int) -> np.ndarray:
+        """(B, width) int32 block-table matrix, null-block padded."""
+        out = np.full((len(seqs), width), self.null_block, np.int32)
+        for i, seq in enumerate(seqs):
+            t = self.alloc.tables[seq]
+            assert len(t) <= width, (seq, len(t), width)
+            out[i, :len(t)] = t
+        return out
+
+    def gather_dense(self, tables, s_max: int):
+        """Reassemble ``(L, B, s_max, KV, Dh)`` dense-layout K and V views
+        from block tables — positions past a sequence's length hold garbage
+        and must be masked by the consumer (attention already does)."""
+        ops = self._ops
+        tables = ops["jnp"].asarray(tables, ops["jnp"].int32)
+        k = ops["gather_dense"](self.k_pool, tables, s_max)
+        v = ops["gather_dense"](self.v_pool, tables, s_max)
+        return k, v
+
+    def check(self):
+        self.alloc.check()
