@@ -64,6 +64,7 @@ def main() -> None:
         ap.error("--full and --smoke are mutually exclusive")
 
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from benchmarks import elastic_serving as ES
     from benchmarks import multi_tenant as MT
     from benchmarks import paged_kv as PK
     from benchmarks import paper_benches as PB
@@ -88,6 +89,9 @@ def main() -> None:
         "multitenant": lambda: MT.bench_multi_tenant(grid),
         "routing": lambda: RT.bench_routing(grid),
         "reliability": lambda: RL.bench_reliability(grid),
+        # the storm needs a few window generations before the goodput gap
+        # stabilises; never run the grid shorter than 30 sim-minutes
+        "elastic": lambda: ES.bench_elastic(max(grid, 30 * 60.0)),
         "serving": lambda: SB.bench_serving(
             n_requests=8 if args.smoke else 16, n_new=8 if args.smoke else 16,
             repeats=2 if args.smoke else 3),

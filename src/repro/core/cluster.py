@@ -70,7 +70,8 @@ class SlurmSim:
                  sched_interval: float = 15.0, grace: float = 180.0,
                  slot_s: float = 120.0, executor=None,
                  pass_budget: Optional[int] = None, chain_on_exit: bool = True,
-                 invoker_kwargs: Optional[dict] = None):
+                 invoker_kwargs: Optional[dict] = None,
+                 invoker_factory: Optional[Callable[..., Invoker]] = None):
         self.sim = sim
         self.controller = controller
         self.rng = rng
@@ -85,6 +86,10 @@ class SlurmSim:
         self.pass_budget = pass_budget
         self.chain_on_exit = chain_on_exit
         self.invoker_kwargs = invoker_kwargs or {}
+        # worker-construction seam: gang-aware platforms substitute a factory
+        # that builds pool-managed members instead of plain invokers; the
+        # call signature is exactly the Invoker constructor's
+        self.invoker_factory = invoker_factory or Invoker
         self.nodes: Dict[int, _NodeState] = {}
         # vacancy index: node ids whose window is open and invoker-free right
         # now — exactly the candidate set a scheduling pass has to consider
@@ -285,10 +290,11 @@ class SlurmSim:
             # down to the 2-minute slot grid
             duration = min(job.time_max_s, remaining_pred)
             duration = max(job.time_min_s, duration // self.slot_s * self.slot_s)
-        inv = Invoker(self.sim, self.controller, node=node,
-                      sched_end=self.sim.now + duration, rng=self.rng,
-                      executor=self.executor, on_exit=self._on_invoker_exit,
-                      grace=self.grace, **self.invoker_kwargs)
+        inv = self.invoker_factory(
+            self.sim, self.controller, node=node,
+            sched_end=self.sim.now + duration, rng=self.rng,
+            executor=self.executor, on_exit=self._on_invoker_exit,
+            grace=self.grace, **self.invoker_kwargs)
         st.invoker = inv
         st.job = job
         inv._slurm_node = node          # backref for exit handling

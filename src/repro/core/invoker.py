@@ -35,7 +35,9 @@ class Invoker:
                  overhead: float = 0.08, drain_margin: float = 15.0,
                  grace: float = 180.0, max_warm_containers: int = 32,
                  executor: Optional[Callable[[Request], float]] = None,
-                 on_exit: Optional[Callable[["Invoker"], None]] = None):
+                 on_exit: Optional[Callable[["Invoker"], None]] = None,
+                 on_sigterm: Optional[Callable[["Invoker", str], None]] = None,
+                 warmup: Optional[float] = None):
         self.id = next(_INV_IDS)
         self.sim = sim
         self.controller = controller
@@ -50,6 +52,7 @@ class Invoker:
         self.max_warm = max_warm_containers
         self.executor = executor        # maps request -> execution seconds
         self.on_exit = on_exit
+        self.on_sigterm = on_sigterm    # pre-exit hook at grace start
         self.state = "warming"
         self._registered = False    # True between register() and deregister()
         self.warm_fns: Dict[str, float] = {}   # fn -> last use (LRU)
@@ -63,7 +66,11 @@ class Invoker:
         self.n_executed = 0     # useful executions (request not yet terminal)
         self.n_wasted = 0       # executions of already-decided requests plus
                                 # work killed mid-flight (preemption, hedging)
-        self.warmup = float(rng.lognormal(WARMUP_MU, WARMUP_SIGMA))
+        # explicit warmup override skips the lognormal draw entirely, so
+        # callers that pass it (gang logical invokers, formed from already
+        # warm members) do not perturb the shared rng's draw order
+        self.warmup = (float(rng.lognormal(WARMUP_MU, WARMUP_SIGMA))
+                       if warmup is None else float(warmup))
         sim.after(self.warmup, self._become_healthy)
         # proactive drain before own declared time limit (timeout SIGTERM)
         self._deadline_ev = sim.at(max(sched_end - drain_margin, sim.now),
@@ -84,10 +91,17 @@ class Invoker:
         or finish the running invocations, deregister, exit."""
         if self.state in ("draining", "dead"):
             return
-        was_warming = self.state == "warming"
         self.state = "draining"
         self.sim.cancel(self._deadline_ev)
-        if not was_warming:
+        # pre-exit migration hook: fires at grace start, BEFORE any
+        # requeue/kill decision — an elastic gang uses the grace window to
+        # move this member's state (shards, KV) somewhere that survives
+        if self.on_sigterm is not None:
+            self.on_sigterm(self, reason)
+        # guard on registration, not on the warming state: gang members are
+        # healthy without ever registering (their gang is the controller-
+        # visible invoker), and healthy <=> registered for everyone else
+        if self._registered:
             self.controller.mark_unavailable(self)
         # requeue running invocations that cannot finish within the grace.
         # SIGKILL fires at now + grace, so anything with remaining <= grace

@@ -26,6 +26,17 @@ def reshard_restore(cfg: ModelConfig, template: Any, directory: str,
     return ckpt.restore(template, directory, step=step, shardings=shardings)
 
 
+def reshard_in_place(params: Any, cfg: ModelConfig, mesh) -> Any:
+    """Re-lay a LIVE params pytree onto ``mesh`` without the checkpoint
+    round-trip: the target shardings come from the same path-based rules as
+    :func:`reshard_restore`, but the source arrays are device-resident, so
+    ``jax.device_put`` performs the resize directly. This is the elastic
+    *serving* resize — a gang losing (or gaining) a member inside its SIGTERM
+    grace reshards the full parameter set onto the survivors instead of
+    writing and re-reading a checkpoint."""
+    return jax.device_put(params, param_shardings(params, cfg, mesh))
+
+
 def dp_degree(mesh) -> int:
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     return sizes.get("data", 1) * sizes.get("pod", 1)

@@ -1,0 +1,32 @@
+"""Elastic sharded serving over harvested multi-node idle windows.
+
+A model too big for any single invoker is served tensor-parallel across a
+*gang* of concurrently-idle nodes (one simulated host device per member,
+``--xla_force_host_platform_device_count`` idiom), and survives window churn
+by migrating shards instead of losing the whole replica:
+
+:mod:`mesh`       — host-device mesh construction and per-member byte
+                    accounting (what a departing node must hand off).
+:mod:`replica`    — :class:`ElasticReplica`: the gang-owned serving engine,
+                    params laid out by ``distributed.sharding`` rules, with
+                    ``shrink``/``grow`` mesh resizes mid-stream.
+:mod:`migration`  — :class:`MigrationProtocol`: drain -> reshard params in
+                    place -> hand off the departing member's KV (optionally
+                    int8-compressed on the wire) -> resume token-identically.
+
+The platform-side gang lifecycle (members as invokers, the controller seeing
+one logical invoker, SIGTERM-driven migration) lives in
+``repro.platform.elastic``; this package is pure JAX and imports no
+simulation layer.
+"""
+from repro.distributed.elastic_serving.mesh import (available_gang_devices,
+                                                    ensure_host_devices,
+                                                    member_shard_bytes,
+                                                    serving_mesh)
+from repro.distributed.elastic_serving.migration import (MigrationProtocol,
+                                                         MigrationRecord)
+from repro.distributed.elastic_serving.replica import ElasticReplica
+
+__all__ = ["ElasticReplica", "MigrationProtocol", "MigrationRecord",
+           "serving_mesh", "member_shard_bytes", "ensure_host_devices",
+           "available_gang_devices"]

@@ -1,0 +1,63 @@
+"""Gang meshes over simulated host devices.
+
+Each gang member (one harvested node) is stood in for by one XLA host
+platform device — the ``--xla_force_host_platform_device_count`` idiom
+(SNIPPETS.md): set the flag before jax initialises and a single CPU exposes N
+devices, so tensor-parallel layouts, resharding, and device-to-device moves
+exercise the real GSPMD machinery without a cluster.
+
+The serving mesh is one-dimensional over the ``"model"`` axis: gang TP is
+pure tensor parallelism (every member holds a distinct shard of every weight
+and of the KV feature dims), which is what makes a member's departure a
+*hand-off problem* — its shard exists nowhere else.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, List, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def ensure_host_devices(n: int) -> None:
+    """Request ``n`` simulated host devices. Only effective BEFORE jax
+    initialises its backend (first device query locks the count) — call it at
+    entrypoint top, like ``launch.dryrun`` does; afterwards it still shapes
+    any subprocess this process forks (benchmark legs run in fresh
+    interpreters). Never overrides a flag the caller already set."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={int(n)}".strip())
+
+
+def available_gang_devices() -> int:
+    """How many devices a gang can actually span in this process."""
+    return len(jax.devices())
+
+
+def serving_mesh(n_members: int, devices: Optional[List] = None) -> Mesh:
+    """A 1-D tensor-parallel mesh over ``n_members`` gang members. With fewer
+    real devices than members (the flag was not set early enough), the mesh
+    CLAMPS to what exists — sharding rules degrade gracefully, so serving
+    stays correct and only the simulated-distribution fidelity shrinks."""
+    if devices is None:
+        devices = jax.devices()
+    n = max(1, min(int(n_members), len(devices)))
+    return Mesh(np.asarray(devices[:n]), ("model",))
+
+
+def tree_bytes(tree: Any) -> int:
+    return int(sum(leaf.nbytes for leaf in jax.tree.leaves(tree)))
+
+
+def member_shard_bytes(tree: Any, mesh: Mesh) -> int:
+    """Bytes of ``tree`` resident on ONE member of ``mesh`` under even model
+    sharding — the volume a departing node must push to survivors inside its
+    SIGTERM grace. Computed analytically (total / mesh size): rules that drop
+    an axis replicate the leaf, so this is the upper bound the migration
+    protocol budgets for."""
+    n = int(np.prod(mesh.devices.shape))
+    return tree_bytes(tree) // max(n, 1)

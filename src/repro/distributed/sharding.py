@@ -21,6 +21,28 @@ def _axis(mesh: Mesh, name: str) -> int:
     return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
 
 
+def ambient_mesh_sizes() -> Optional[Dict[str, int]]:
+    """Axis-name -> size of the ambient mesh (the ``with mesh:`` context the
+    launcher established), or None when no mesh is active. Public-API lookup,
+    version-guarded like the ``jax.sharding.AxisType`` gate in
+    ``launch.mesh``: ``jax.sharding.get_abstract_mesh`` where it exists
+    (post-0.4.x), else the long-stable ``jax.interpreters.pxla`` re-export of
+    ``thread_resources`` — never ``jax._src``."""
+    get_am = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_am is not None:
+        am = get_am()
+        if am is not None and not getattr(am, "empty", True):
+            return dict(zip(am.axis_names, am.axis_sizes))
+    try:
+        from jax.interpreters import pxla
+        pm = pxla.thread_resources.env.physical_mesh
+    except (ImportError, AttributeError):
+        return None
+    if pm.empty:
+        return None
+    return dict(zip(pm.axis_names, pm.devices.shape))
+
+
 def maybe_shard(x, *axes):
     """Best-effort activation sharding constraint: applies
     ``with_sharding_constraint`` against the AMBIENT mesh (the ``with mesh:``
@@ -28,11 +50,9 @@ def maybe_shard(x, *axes):
     the dimension are dropped; with no ambient mesh this is the identity —
     so model code can call it unconditionally and still run in plain CPU
     tests."""
-    from jax._src import mesh as mesh_lib
-    pm = mesh_lib.thread_resources.env.physical_mesh
-    if pm.empty:
+    sizes = ambient_mesh_sizes()
+    if sizes is None:
         return x
-    sizes = dict(zip(pm.axis_names, pm.devices.shape))
     clean = []
     for dim, ax in zip(x.shape, axes):
         cand = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
@@ -46,7 +66,9 @@ def maybe_shard(x, *axes):
 
 
 def _fit(spec: Tuple[Optional[str], ...], shape, mesh: Mesh):
-    """Drop axes that do not divide the dimension; prepend None for extras."""
+    """Drop axes the mesh does not have (a 1-D serving gang mesh carries only
+    "model") and axes that do not divide the dimension; prepend None for
+    extras."""
     spec = (None,) * (len(shape) - len(spec)) + tuple(spec)
     out = []
     for dim, ax in zip(shape, spec):
@@ -54,8 +76,12 @@ def _fit(spec: Tuple[Optional[str], ...], shape, mesh: Mesh):
             out.append(None)
             continue
         axes = ax if isinstance(ax, tuple) else (ax,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
         n = int(np.prod([_axis(mesh, a) for a in axes]))
-        out.append(ax if dim % n == 0 else None)
+        if not axes or dim % n != 0:
+            out.append(None)
+        else:
+            out.append(axes if len(axes) > 1 else axes[0])
     return P(*out)
 
 

@@ -94,6 +94,12 @@ class MetricsRegistry:
     def counters_matching(self, name: str) -> Dict[LabelKey, Counter]:
         return {k[1]: c for k, c in self._counters.items() if k[0] == name}
 
+    def gauges_matching(self, name: str) -> Dict[LabelKey, Gauge]:
+        """All label sets of one gauge family (callback gauges included) —
+        the gauge-side mirror of :meth:`counters_matching`, e.g. every
+        per-gang ``gang_mesh_size``."""
+        return {k[1]: g for k, g in self._gauges.items() if k[0] == name}
+
     def total(self, name: str) -> float:
         """Sum of a counter over all label sets."""
         return sum(c.value for c in self.counters_matching(name).values())

@@ -21,6 +21,8 @@ from repro.platform.scalers import AdaptiveJobManager, JobManager
 from repro.platform.sources import SuiteLoad, UniformLoad
 from repro.platform.executors import (BatchedServingExecutor, ServingExecutor,
                                       SimExecutor)
+from repro.platform.elastic import (ElasticGangInvoker, ElasticServingExecutor,
+                                    GangMember, GangPool)
 from repro.platform import admission as _admission  # noqa: F401 (registers)
 from repro.platform import reliability as _reliability  # noqa: F401 (registers)
 from repro.platform.reliability import RetryPolicy
@@ -37,6 +39,7 @@ __all__ = [
     "JobManager", "AdaptiveJobManager",
     "UniformLoad", "SuiteLoad",
     "SimExecutor", "ServingExecutor", "BatchedServingExecutor",
+    "GangMember", "ElasticGangInvoker", "GangPool", "ElasticServingExecutor",
     "HarvestConfig", "HarvestResult", "HarvestRuntime", "Platform",
     "nan_to_none",
 ]

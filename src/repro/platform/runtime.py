@@ -135,6 +135,14 @@ class Platform:
         else:
             self.executor = resolve("executor", sc.platform.executor)(
                 self, **sc.platform.executor_params)
+        # gang mode: workers become members of tensor-parallel serving gangs
+        # (one logical invoker per gang); the pool's spawn_member replaces
+        # the plain Invoker constructor in SlurmSim's placement path
+        self.gang_pool = None
+        if sc.platform.gang_size > 1:
+            from repro.platform.elastic import GangPool
+            self.gang_pool = GangPool(self, gang_size=sc.platform.gang_size,
+                                      **sc.platform.gang_params)
         sch = sc.scheduling
         self.slurm = SlurmSim(
             self.sim, self.windows, self.controller, self.rng,
@@ -145,7 +153,9 @@ class Platform:
             # (Sec. V-B2) — bounded per-pass placements, no plan chaining.
             pass_budget=(sch.var_pass_budget if sch.model == "var" else None),
             chain_on_exit=(sch.model == "fib"),
-            invoker_kwargs=dict(sc.platform.invoker_params))
+            invoker_kwargs=dict(sc.platform.invoker_params),
+            invoker_factory=(self.gang_pool.spawn_member
+                             if self.gang_pool is not None else None))
         self.scaler = resolve("scaler", sch.scaler)(self, **sch.scaler_params)
         self.scaler.start()
         self.requests: List[Request] = []

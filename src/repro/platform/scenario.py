@@ -94,11 +94,17 @@ class PlatformSection:
     admission: str = "none"             # none | slo
     executor: str = "sim"               # executor registry key
     kv_layout: str = "dense"            # serving KV cache: dense | paged
+    # gang_size > 1 turns workers into gang members: the controller sees one
+    # logical invoker per gang of concurrently-open idle windows, serving a
+    # model tensor-parallel across them (repro.platform.elastic).
+    # gang_params feeds GangPool (migrate / form_warmup / model_bytes / ...)
+    gang_size: int = 1
     queue_depth_soft_limit: int = 64
     router_params: Dict[str, Any] = dataclasses.field(default_factory=dict)
     admission_params: Dict[str, Any] = dataclasses.field(default_factory=dict)
     executor_params: Dict[str, Any] = dataclasses.field(default_factory=dict)
     invoker_params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    gang_params: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -246,6 +252,46 @@ class ScenarioConfig:
             workload=WorkloadSection(qps=0.5, exec_time=240.0, timeout=1800.0,
                                      non_interruptible_share=0.7),
             scheduling=SchedulingSection(model="fib"),
+            reliability=ReliabilitySection(policy="retry", max_retries=3,
+                                           backoff_base=0.5))
+
+    @classmethod
+    def elastic_storm(cls, duration: float = 2 * 3600.0, gang_size: int = 3,
+                      seed: int = 7, migrate: bool = True) -> "ScenarioConfig":
+        """Elastic sharded serving under the preemption storm: the model
+        needs a GANG of ``gang_size`` concurrently-open idle windows, and
+        those windows are short, fragmented, and over-predicted — so members
+        are constantly torn out of live gangs. With ``migrate`` the gang
+        re-shards onto the survivors inside the member's grace (the
+        tentpole's live shard+KV migration); without it one eviction costs
+        the whole replica and a re-formed gang re-pays the model load. The
+        deadline-aware router prices placements against the gang's MINIMUM
+        member lease. The pivotal ratio: calls (240 s) are LONGER than the
+        median idle window (~210 s), so without migration almost no gang
+        survives a whole call — exactly the regime where carrying state
+        across member churn is the difference between goodput and a retry
+        loop. Load is kept under capacity (offered concurrency well below
+        gangs x concurrency) so goodput measures survival, not admission."""
+        return cls(
+            name=f"elastic_storm_g{gang_size}"
+                 f"{'_migrate' if migrate else '_lose'}",
+            duration=duration, seed=seed,
+            trace=TraceSection(
+                avg_idle_nodes=9.0, full_share=0.06, seed=29,
+                params={
+                    "idle_quantiles": [[0.0, 60.0], [0.25, 140.0],
+                                       [0.5, 210.0], [0.75, 330.0],
+                                       [0.9, 520.0], [0.98, 760.0],
+                                       [1.0, 1100.0]],
+                    "slack_lo": 1.2, "slack_hi": 4.0,
+                }),
+            workload=WorkloadSection(qps=0.15, exec_time=240.0,
+                                     timeout=1200.0,
+                                     non_interruptible_share=0.3),
+            scheduling=SchedulingSection(model="fib"),
+            platform=PlatformSection(router="deadline-aware",
+                                     gang_size=gang_size,
+                                     gang_params={"migrate": migrate}),
             reliability=ReliabilitySection(policy="retry", max_retries=3,
                                            backoff_base=0.5))
 

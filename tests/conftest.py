@@ -1,0 +1,19 @@
+"""Test-session bootstrap.
+
+The elastic-serving tests stand in for gang members with simulated XLA host
+devices (``--xla_force_host_platform_device_count``, see
+``repro.distributed.elastic_serving.mesh``). The flag only takes effect if it
+is set before jax initialises its backend, so it must be exported here — at
+conftest import, before any test module imports jax. Never override a count
+the caller already chose, and never touch the environment once jax is live
+(the backend is locked; appending the flag then would only confuse a later
+subprocess).
+"""
+import os
+import sys
+
+if "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{_flags} --xla_force_host_platform_device_count=8".strip())

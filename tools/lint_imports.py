@@ -3,9 +3,12 @@
 
 Enforces the package layering that makes the seams composable:
 
-    repro.core  (paper mechanisms)      imports no policy layer
+    repro.core  (paper mechanisms)      imports no policy or model layer
     repro.faas  (multi-tenant policies) may import repro.core
-    repro.platform (composition)        may import both
+    repro.distributed (JAX substrate)   imports no sim/policy/composition
+                                        layer (it must stay usable without a
+                                        simulator — see elastic_serving)
+    repro.platform (composition)        may import all of them
 
 Violations of that order — and *any* import cycle between top-level
 ``repro.*`` packages — fail the build. Only module-level imports count
@@ -23,8 +26,9 @@ from typing import Dict, Iterable, List, Set, Tuple
 
 # importer -> packages it must never import at module level
 LAYERING = {
-    "core": {"faas", "platform"},
+    "core": {"faas", "platform", "distributed"},
     "faas": {"platform"},
+    "distributed": {"core", "faas", "platform"},
 }
 
 
