@@ -71,6 +71,7 @@ def main() -> None:
     from benchmarks import reliability as RL
     from benchmarks import routing as RT
     from benchmarks import serving_batching as SB
+    from benchmarks import serving_matrix as SM
 
     if args.smoke:
         day = resp = grid = 5 * 60.0
@@ -98,6 +99,9 @@ def main() -> None:
         "paged_kv": lambda: PK.bench_paged_kv(
             n_requests=12 if args.smoke else 24,
             kernel_requests=4 if args.smoke else 6),
+        "serving_matrix": lambda: SM.bench_serving_matrix(
+            archs=SM.SMOKE_ARCHS if args.smoke else None,
+            slots_grid=(2,) if args.smoke else (2, 4)),
         "roofline": bench_roofline_summary,
     }
     if args.list:

@@ -9,13 +9,18 @@ by CPU tests. The FULL configs are only ever lowered via ShapeDtypeStructs
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Dict, Mapping, Optional, Tuple, Union
 
 import jax.numpy as jnp
 
 
 def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
+
+
+# Dispatch sites that can swap a reference einsum path for a Pallas kernel.
+KERNEL_SITES: Tuple[str, ...] = ("attention", "ssm", "moe", "rmsnorm")
+KERNEL_IMPL_CHOICES: Tuple[str, ...] = ("reference", "kernel")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +92,33 @@ class ModelConfig:
     # attention implementation for full-seq paths: einsum (materialized
     # scores) | chunked (online-softmax blocks, the flash-kernel twin)
     attn_impl: str = "einsum"
+    # per-site Pallas dispatch policy: mapping site -> reference | kernel,
+    # normalized to a sorted tuple of pairs so the config stays hashable.
+    # Empty = all-reference (training paths must stay empty: the Pallas
+    # kernels define no VJP).
+    kernel_impls: Tuple[Tuple[str, str], ...] = ()
+
+    def __post_init__(self):
+        impls = self.kernel_impls
+        if isinstance(impls, Mapping):
+            impls = tuple(sorted(impls.items()))
+        else:
+            impls = tuple(sorted(tuple(p) for p in impls))
+        for site, impl in impls:
+            if site not in KERNEL_SITES:
+                raise ValueError(
+                    f"kernel_impls: unknown site {site!r}; allowed sites: "
+                    f"{KERNEL_SITES}")
+            if impl not in KERNEL_IMPL_CHOICES:
+                raise ValueError(
+                    f"kernel_impls[{site!r}]: unknown impl {impl!r}; allowed "
+                    f"impls: {KERNEL_IMPL_CHOICES}")
+            if impl == "kernel" and site not in supported_kernel_sites(self):
+                raise ValueError(
+                    f"kernel_impls[{site!r}]=kernel is unsupported for arch "
+                    f"{self.arch_id!r} (family={self.family!r}); supported "
+                    f"kernel sites: {tuple(sorted(supported_kernel_sites(self)))}")
+        object.__setattr__(self, "kernel_impls", impls)
 
     # --- derived -----------------------------------------------------------
     @property
@@ -190,6 +222,61 @@ class ModelConfig:
             n += per_attn + per_dense_ffn  # ONE shared block
         n += 2 * self.n_layers * d + d  # norms (approximate)
         return n
+
+
+# ---------------------------------------------------------------------------
+# Kernel-dispatch policy helpers
+# ---------------------------------------------------------------------------
+def supported_kernel_sites(cfg: ModelConfig) -> frozenset:
+    """Sites where this arch can legally run the Pallas kernel.
+
+    MLA attention is excluded: the absorbed latent-cache attention has no
+    flash-kernel twin (scores are computed in the compressed space), so
+    deepseek-style archs keep reference attention while still taking the
+    moe/rmsnorm kernels. gelu archs use LayerNorm, not RMSNorm.
+    """
+    sites = set()
+    if cfg.n_attn_layers > 0 and not cfg.use_mla:
+        sites.add("attention")
+    if cfg.n_ssm_layers > 0:
+        sites.add("ssm")
+    if cfg.n_experts > 0:
+        sites.add("moe")
+    if cfg.act != "gelu":
+        sites.add("rmsnorm")
+    return frozenset(sites)
+
+
+def kernel_impl(cfg: ModelConfig, site: str) -> str:
+    """Resolved impl for a dispatch site: 'reference' unless opted in."""
+    if site not in KERNEL_SITES:
+        raise ValueError(
+            f"unknown kernel site {site!r}; allowed sites: {KERNEL_SITES}")
+    return dict(cfg.kernel_impls).get(site, "reference")
+
+
+def with_kernel_impls(
+    cfg: ModelConfig,
+    impls: Union[str, Mapping[str, str]] = "auto",
+) -> ModelConfig:
+    """Return a copy of ``cfg`` with a kernel-dispatch policy applied.
+
+    ``impls="auto"`` opts every supported site into the kernel path;
+    ``impls="reference"`` clears the policy; a mapping is validated
+    against :data:`KERNEL_SITES` / arch capabilities by ``__post_init__``.
+    """
+    if impls == "auto":
+        mapping: Dict[str, str] = {
+            s: "kernel" for s in supported_kernel_sites(cfg)}
+    elif impls == "reference":
+        mapping = {}
+    elif isinstance(impls, str):
+        raise ValueError(
+            f"with_kernel_impls: unknown policy {impls!r}; allowed: 'auto', "
+            f"'reference', or a mapping site->impl over sites {KERNEL_SITES}")
+    else:
+        mapping = dict(impls)
+    return dataclasses.replace(cfg, kernel_impls=tuple(sorted(mapping.items())))
 
 
 # ---------------------------------------------------------------------------

@@ -1,11 +1,15 @@
 """Jit'd wrappers + integration helpers around the Pallas kernels.
 
 ``interpret`` defaults to True on CPU (this container) and False on TPU, so
-the same call sites work in tests and on real hardware.
+the same call sites work in tests and on real hardware. The
+``REPRO_PALLAS_INTERPRET`` environment variable overrides the backend probe
+(``1``/``true`` forces interpret mode, ``0``/``false`` forces compiled
+kernels) so CI and tests can pin the mode explicitly.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -16,8 +20,25 @@ from repro.kernels.paged_attention import paged_attention
 from repro.kernels.rmsnorm import rmsnorm
 from repro.kernels.ssd import ssd
 
+_TRUE = ("1", "true", "yes", "on")
+_FALSE = ("0", "false", "no", "off")
 
+
+@functools.lru_cache(maxsize=None)
 def _default_interpret() -> bool:
+    """Memoized: the backend cannot change mid-process, and every kernel
+    wrapper consults this at trace time. Tests that flip the env override
+    must call ``_default_interpret.cache_clear()``."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        val = env.strip().lower()
+        if val in _TRUE:
+            return True
+        if val in _FALSE:
+            return False
+        raise ValueError(
+            f"REPRO_PALLAS_INTERPRET={env!r} is not a boolean; allowed "
+            f"values: {_TRUE + _FALSE}")
     return jax.default_backend() != "tpu"
 
 
@@ -43,6 +64,12 @@ def rmsnorm_op(x, w, eps=1e-5, interpret=None):
 def ssd_op(x, dt, a, b_mat, c_mat, chunk=128, interpret=None):
     return ssd(x, dt, a, b_mat, c_mat, chunk=chunk,
                interpret=_default_interpret() if interpret is None else interpret)
+
+
+def moe_gmm_op(lhs, rhs, tile_expert, *, block_t: int = 128,
+               block_f: int = 128, interpret=None):
+    return moe_gmm(lhs, rhs, tile_expert, block_t=block_t, block_f=block_f,
+                   interpret=_default_interpret() if interpret is None else interpret)
 
 
 def pad_group_sizes(group_sizes, block_t: int):

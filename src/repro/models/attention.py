@@ -12,7 +12,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, kernel_impl
 from repro.models.layers import apply_rope, trunc_normal
 
 NEG_INF = -1e9  # large-negative instead of -inf: keeps softmax NaN-free
@@ -169,6 +169,22 @@ def chunked_mha(q, k, v, cfg: ModelConfig, chunk_q: int = 512,
     return out[:, :s]
 
 
+def _flash_mha(q, k, v, cfg: ModelConfig):
+    """Pallas flash-attention twin of the full-seq einsum/chunked paths.
+
+    q: (B,S,H,Dh), k/v: (B,S,KV,Dh) post-RoPE — the kernel repeats KV heads
+    internally (GQA) and applies causal/sliding-window masks by absolute row
+    index, which matches the reference `_attn_mask` because every full-seq
+    call site passes positions == arange(S). Returns (B,S,H*Dh).
+    """
+    from repro.kernels.ops import flash_attention_op
+    b, s, h, d = q.shape
+    out = flash_attention_op(
+        jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2),
+        causal=cfg.is_autoregressive, window=cfg.sliding_window)
+    return jnp.moveaxis(out, 1, 2).reshape(b, s, h * d)
+
+
 def _mha_core(q, k, v, positions, cfg: ModelConfig):
     """Head-parallel attention core: q,k,v all (B,S,H,Dh), H sharded over
     "model" in shard_activations mode (the classic TP layout — attention math
@@ -198,6 +214,9 @@ def gqa_attention(p, x, positions, cfg: ModelConfig):
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     g = cfg.n_heads // cfg.n_kv_heads
+    if kernel_impl(cfg, "attention") == "kernel":
+        out = _flash_mha(q, k, v, cfg)
+        return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(dt))
     if cfg.attn_impl == "chunked":
         out = chunked_mha(q, jnp.repeat(k, g, axis=2), jnp.repeat(v, g, axis=2), cfg)
         return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(dt))
@@ -410,6 +429,12 @@ def gqa_prefill(p, x, positions, cfg: ModelConfig):
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     g = cfg.n_heads // cfg.n_kv_heads
+    if kernel_impl(cfg, "attention") == "kernel":
+        out = _flash_mha(q, k, v, cfg)
+        out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(dt))
+        if cfg.sliding_window:
+            k, v = k[:, -cfg.sliding_window:], v[:, -cfg.sliding_window:]
+        return out, k, v
     if cfg.attn_impl == "chunked" or cfg.shard_activations:
         if cfg.attn_impl == "chunked":
             out = chunked_mha(q, jnp.repeat(k, g, axis=2),

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, kernel_impl
 
 
 def trunc_normal(rng, shape, scale, dtype):
@@ -17,7 +17,12 @@ def trunc_normal(rng, shape, scale, dtype):
 
 
 # --- norms ------------------------------------------------------------------
-def rms_norm(x, weight, eps: float):
+def rms_norm(x, weight, eps: float, cfg: ModelConfig | None = None):
+    """RMSNorm; pass ``cfg`` to honor its ``kernel_impls['rmsnorm']`` policy
+    (the fused Pallas row kernel on serving paths)."""
+    if cfg is not None and kernel_impl(cfg, "rmsnorm") == "kernel":
+        from repro.kernels.ops import rmsnorm_op
+        return rmsnorm_op(x, weight, eps=eps)
     dt = x.dtype
     x = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
@@ -33,9 +38,9 @@ def layer_norm(x, weight, bias, eps: float):
     return y.astype(dt) * weight.astype(dt) + bias.astype(dt)
 
 
-def gated_rms_norm(x, gate, weight, eps: float):
+def gated_rms_norm(x, gate, weight, eps: float, cfg: ModelConfig | None = None):
     """Mamba2 RMSNormGated: norm(x * silu(gate)) * weight."""
-    return rms_norm(x * jax.nn.silu(gate.astype(x.dtype)), weight, eps)
+    return rms_norm(x * jax.nn.silu(gate.astype(x.dtype)), weight, eps, cfg)
 
 
 def _shard(cfg: ModelConfig, x, *axes):

@@ -14,12 +14,13 @@ property test sweeps this.
 """
 from __future__ import annotations
 
+import math
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, kernel_impl
 from repro.models.layers import trunc_normal
 
 
@@ -154,14 +155,96 @@ def _moe_ragged(p, x, weights, idx, cfg: ModelConfig):
     return jnp.sum(y_rep.reshape(t, k, d), axis=1)
 
 
-_IMPLS = {"dense": _moe_dense, "scatter": _moe_scatter, "ragged": _moe_ragged}
+def _moe_gmm_capacity(p, x, weights, idx, cfg: ModelConfig):
+    """Pallas twin of ``_moe_scatter``: identical capacity/drop bookkeeping
+    (same cap, slot and keep math — so the drop set matches token-for-token),
+    with the (E, C, D) expert FFN computed by the ``moe_gmm`` grouped-matmul
+    kernel instead of a batched einsum."""
+    from repro.kernels.ops import moe_gmm_capacity
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(t * k / e * cfg.capacity_factor + 0.999)
+    cap = max(8, min(t, (cap + 7) // 8 * 8))
+    flat_e = idx.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.sum(pos * onehot, axis=-1)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)
+    x_rep = jnp.repeat(x, k, axis=0)
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].add(x_rep)
+    buf3 = buf[:-1].reshape(e, cap, d)
+    bt = math.gcd(cap, 128)   # cap need not divide 128 when clamped to t
+    dt = x.dtype
+    g = jax.nn.silu(moe_gmm_capacity(buf3, p["w_gate"].astype(dt), block_t=bt))
+    u = moe_gmm_capacity(buf3, p["w_up"].astype(dt), block_t=bt)
+    h = moe_gmm_capacity(g * u, p["w_down"].astype(dt), block_t=bt)
+    y_rep = h.reshape(e * cap, d)[jnp.minimum(slot, e * cap - 1)]
+    y_rep = jnp.where(keep[:, None], y_rep, 0.0)
+    y_rep = y_rep * weights.reshape(-1, 1).astype(x.dtype)
+    return jnp.sum(y_rep.reshape(t, k, d), axis=1)
+
+
+def _moe_gmm_dropless(p, x, weights, idx, cfg: ModelConfig):
+    """Pallas twin of ``_moe_ragged``: dropless sort-by-expert dispatch with
+    each expert's row range padded up to a ``block_t`` multiple (zero rows)
+    so every tile belongs to one expert — megablocks-style. Processes the
+    exact same token set as the ragged/dense reference paths."""
+    from repro.kernels.ops import moe_gmm_op, pad_group_sizes
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    tk = t * k
+    bt = 128 if tk >= 128 else 8
+    # static worst-case padded length (every group rounds up by < bt)
+    t_pad = (tk + bt - 1) // bt * bt + e * bt
+    flat_e = idx.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    inv = jnp.argsort(order, stable=True)
+    xs = jnp.repeat(x, k, axis=0)[order]
+    group_sizes = jnp.bincount(flat_e, length=e).astype(jnp.int32)
+    _, padded_offs = pad_group_sizes(group_sizes, bt)
+    raw_offs = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(group_sizes)])
+    shift = (padded_offs[:-1] - raw_offs[:-1]).astype(jnp.int32)
+    dest = jnp.arange(tk, dtype=jnp.int32) + shift[flat_e[order]]
+    buf = jnp.zeros((t_pad, d), x.dtype).at[dest].set(xs)
+    tile_starts = jnp.arange(t_pad // bt, dtype=jnp.int32) * bt
+    te = jnp.clip(
+        jnp.searchsorted(padded_offs, tile_starts, side="right") - 1, 0, e - 1
+    ).astype(jnp.int32)
+    dt = x.dtype
+    g = jax.nn.silu(moe_gmm_op(buf, p["w_gate"].astype(dt), te, block_t=bt))
+    u = moe_gmm_op(buf, p["w_up"].astype(dt), te, block_t=bt)
+    ys = moe_gmm_op(g * u, p["w_down"].astype(dt), te, block_t=bt)[dest]
+    y_rep = ys[inv] * weights.reshape(-1, 1).astype(dt)
+    return jnp.sum(y_rep.reshape(t, k, d), axis=1)
+
+
+def _moe_gmm_impl(p, x, weights, idx, cfg: ModelConfig):
+    """Kernel-path dispatch: mirror the reference impl's drop semantics so
+    temperature-0 tokens stay identical — capacity drops for ``scatter``,
+    dropless for ``ragged``/``dense``."""
+    if cfg.moe_impl == "scatter":
+        return _moe_gmm_capacity(p, x, weights, idx, cfg)
+    return _moe_gmm_dropless(p, x, weights, idx, cfg)
+
+
+_IMPLS = {"dense": _moe_dense, "scatter": _moe_scatter, "ragged": _moe_ragged,
+          "gmm": _moe_gmm_impl}
 
 
 def apply_moe(p, x, cfg: ModelConfig, impl: Optional[str] = None) -> Tuple[jnp.ndarray, dict]:
-    """x: (B,S,D) -> (y, aux)."""
+    """x: (B,S,D) -> (y, aux). The per-config ``kernel_impls['moe']`` policy
+    swaps in the Pallas grouped-matmul path unless ``impl`` overrides it."""
     b, s, d = x.shape
     xt = x.reshape(b * s, d)
     weights, idx, aux = route(p["router"], xt, cfg)
+    if impl is None and kernel_impl(cfg, "moe") == "kernel":
+        impl = "gmm"
+    if (impl or cfg.moe_impl) not in _IMPLS:
+        raise ValueError(
+            f"apply_moe: unknown impl {(impl or cfg.moe_impl)!r}; allowed "
+            f"impls: {tuple(sorted(_IMPLS))}")
     y = _IMPLS[impl or cfg.moe_impl](p, xt, weights, idx, cfg)
     if cfg.n_shared_experts:
         y = y + _shared_ffn(p["shared"], xt, cfg)

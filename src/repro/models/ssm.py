@@ -13,7 +13,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, kernel_impl
 from repro.models.layers import gated_rms_norm, trunc_normal
 
 NEG_INF = -1e9
@@ -163,12 +163,19 @@ def mamba_block(p, u, cfg: ModelConfig, initial_state=None):
         b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
         c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
         dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # dt=0 => identity step
-    y, final_state = ssd_chunked(x, dt, a, b_mat, c_mat, cfg.ssm_chunk, initial_state)
+    if kernel_impl(cfg, "ssm") == "kernel" and initial_state is None:
+        # the Pallas SSD kernel always starts from the zero state; resumed
+        # prefills (initial_state set) keep the reference scan
+        from repro.kernels.ops import ssd_op
+        y, final_state = ssd_op(x, dt, a, b_mat, c_mat, chunk=cfg.ssm_chunk)
+    else:
+        y, final_state = ssd_chunked(x, dt, a, b_mat, c_mat, cfg.ssm_chunk,
+                                     initial_state)
     y = y + x.astype(jnp.float32) * p["D_skip"].astype(jnp.float32)[None, None, :, None]
     if pad:
         y = y[:, :s]
     y = y.reshape(bsz, s, di).astype(dtc)
-    y = gated_rms_norm(y, z, p["norm_w"], cfg.norm_eps)
+    y = gated_rms_norm(y, z, p["norm_w"], cfg.norm_eps, cfg)
     return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dtc)), final_state, conv_tail
 
 
@@ -194,5 +201,5 @@ def mamba_decode(p, u, ssm_state, conv_state, cfg: ModelConfig):
     y, new_state = ssd_decode_step(ssm_state, x, dt, a, b_mat, c_mat)
     y = y + x.astype(jnp.float32) * p["D_skip"].astype(jnp.float32)[None, :, None]
     y = y.reshape(bsz, 1, di).astype(dtc)
-    y = gated_rms_norm(y, z, p["norm_w"], cfg.norm_eps)
+    y = gated_rms_norm(y, z, p["norm_w"], cfg.norm_eps, cfg)
     return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dtc)), new_state, new_conv_state

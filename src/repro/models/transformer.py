@@ -66,7 +66,7 @@ def segments_for(cfg: ModelConfig) -> List[Segment]:
 def _norm(x, p, cfg: ModelConfig):
     if cfg.act == "gelu":  # hubert-style encoder uses LayerNorm (with bias)
         return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
-    return rms_norm(x, p["w"], cfg.norm_eps)
+    return rms_norm(x, p["w"], cfg.norm_eps, cfg)
 
 
 def _init_norm(cfg: ModelConfig, lead):

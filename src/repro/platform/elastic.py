@@ -291,21 +291,27 @@ class ElasticServingExecutor:
 
 
 @register("executor", "sharded-serving")
-def build_sharded_serving(platform: "Platform", *, arch: str = "qwen2.5-3b",
+def build_sharded_serving(platform: "Platform", *, arch: str = None,
                           max_seq: int = 64, init_seed: int = 0,
                           n_slots: int = 4, gang_size: Optional[int] = None,
-                          kv_mode: str = "migrate",
+                          kv_mode: str = "migrate", kernel_impls=None,
                           **params) -> ElasticServingExecutor:
     """One tensor-parallel replica shared by the platform's gang (the PR-5
     shared-engine idiom: every invoker's pull lands on the same engine).
-    ``gang_size`` defaults to the scenario's ``platform.gang_size``."""
+    ``gang_size`` defaults to the scenario's ``platform.gang_size``;
+    ``arch``/``kernel_impls`` default to the scenario's ``platform.model`` /
+    ``platform.kernel_impls`` model-zoo knobs."""
     import jax  # deferred: only real-JAX scenarios pay this import
 
     from repro.configs import get_config
+    from repro.configs.base import with_kernel_impls
     from repro.distributed.elastic_serving import ElasticReplica
     from repro.models import init_params
-    from repro.platform.executors import _KV_GAUGES
+    from repro.platform.executors import _KV_GAUGES, _scenario_model_knobs
+    arch, kernel_impls = _scenario_model_knobs(platform, arch, kernel_impls)
     cfg = get_config(arch, smoke=True)
+    if kernel_impls != "reference":
+        cfg = with_kernel_impls(cfg, kernel_impls)
     model_params = init_params(jax.random.PRNGKey(init_seed), cfg)
     if gang_size is None:
         sc = getattr(platform, "scenario", None)

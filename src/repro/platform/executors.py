@@ -206,14 +206,18 @@ def build_sim(platform: "Platform", **params) -> SimExecutor:
 
 
 def _smoke_engine(arch: str, init_seed: int, max_seq: int, continuous: bool,
-                  paged: bool = False, **engine_params):
+                  paged: bool = False, kernel_impls="reference",
+                  **engine_params):
     import jax  # deferred: only real-JAX scenarios pay this import
 
     from repro.configs import get_config
+    from repro.configs.base import with_kernel_impls
     from repro.models import init_params
     from repro.serving.engine import (ContinuousEngine,
                                       PagedContinuousEngine, ServingEngine)
     cfg = get_config(arch, smoke=True)
+    if kernel_impls != "reference":
+        cfg = with_kernel_impls(cfg, kernel_impls)
     model_params = init_params(jax.random.PRNGKey(init_seed), cfg)
     if continuous:
         cls = PagedContinuousEngine if paged else ContinuousEngine
@@ -221,12 +225,25 @@ def _smoke_engine(arch: str, init_seed: int, max_seq: int, continuous: bool,
     return ServingEngine(cfg, model_params, max_seq=max_seq)
 
 
+def _scenario_model_knobs(platform: "Platform", arch, kernel_impls):
+    """Resolve the model-zoo knobs: explicit executor param > scenario
+    ``platform.model`` / ``platform.kernel_impls`` > defaults."""
+    sc = getattr(getattr(platform, "scenario", None), "platform", None)
+    if arch is None:
+        arch = getattr(sc, "model", "") or "qwen2.5-3b"
+    if kernel_impls is None:
+        kernel_impls = getattr(sc, "kernel_impls", "reference") or "reference"
+    return arch, kernel_impls
+
+
 @register("executor", "serving")
-def build_serving(platform: "Platform", *, engine=None, arch: str = "qwen2.5-3b",
-                  max_seq: int = 64, init_seed: int = 0,
+def build_serving(platform: "Platform", *, engine=None, arch: str = None,
+                  max_seq: int = 64, init_seed: int = 0, kernel_impls=None,
                   **params) -> ServingExecutor:
+    arch, kernel_impls = _scenario_model_knobs(platform, arch, kernel_impls)
     if engine is None:
-        engine = _smoke_engine(arch, init_seed, max_seq, continuous=False)
+        engine = _smoke_engine(arch, init_seed, max_seq, continuous=False,
+                               kernel_impls=kernel_impls)
     return ServingExecutor(engine, **params)
 
 
@@ -248,26 +265,34 @@ def _register_kv_gauges(platform: "Platform", engine):
 
 @register("executor", "batched-serving")
 def build_batched_serving(platform: "Platform", *, engine=None,
-                          arch: str = "qwen2.5-3b", max_seq: int = 64,
+                          arch: str = None, max_seq: int = 64,
                           init_seed: int = 0, n_slots: int = 4,
                           kv_layout: str = None, block_size: int = 16,
                           n_blocks: int = None, attn: str = "gather",
+                          kernel_impls=None,
                           **params) -> BatchedServingExecutor:
     """``kv_layout`` (param > scenario ``platform.kv_layout`` > dense) picks
     the engine's KV cache: ``dense`` reserves ``n_slots x max_seq`` rows,
     ``paged`` shares a block pool (``block_size``/``n_blocks``/``attn`` are
-    paged-only tuning; ``attn="kernel"`` runs the Pallas paged kernel)."""
+    paged-only tuning; ``attn="kernel"`` runs the Pallas paged kernel).
+    ``arch``/``kernel_impls`` (param > scenario ``platform.model`` /
+    ``platform.kernel_impls``) pick the served model and which sites run
+    Pallas kernels vs the reference einsum path."""
     if kv_layout is None:
         sc = getattr(platform, "scenario", None)
         kv_layout = getattr(getattr(sc, "platform", None), "kv_layout",
                             None) or "dense"
-    assert kv_layout in ("dense", "paged"), kv_layout
+    if kv_layout not in ("dense", "paged"):
+        raise ValueError(f"batched-serving: unknown kv_layout={kv_layout!r}; "
+                         f"allowed values: ('dense', 'paged')")
+    arch, kernel_impls = _scenario_model_knobs(platform, arch, kernel_impls)
     if engine is None:
         paged_kw = (dict(block_size=block_size, n_blocks=n_blocks, attn=attn)
                     if kv_layout == "paged" else {})
         engine = _smoke_engine(arch, init_seed, max_seq, continuous=True,
                                paged=(kv_layout == "paged"),
-                               n_slots=n_slots, **paged_kw)
+                               n_slots=n_slots, kernel_impls=kernel_impls,
+                               **paged_kw)
     _register_kv_gauges(platform, engine)
     return BatchedServingExecutor(engine, **params)
 

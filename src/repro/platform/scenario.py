@@ -94,6 +94,12 @@ class PlatformSection:
     admission: str = "none"             # none | slo
     executor: str = "sim"               # executor registry key
     kv_layout: str = "dense"            # serving KV cache: dense | paged
+    # model zoo knobs for the serving executors: which smoke arch the engine
+    # hosts, and its per-site Pallas kernel policy ("" inherits the executor
+    # default; kernel_impls values are reference | kernel | the "auto"/
+    # "reference" shorthands of repro.configs.base.with_kernel_impls)
+    model: str = ""
+    kernel_impls: Any = "reference"
     # gang_size > 1 turns workers into gang members: the controller sees one
     # logical invoker per gang of concurrently-open idle windows, serving a
     # model tensor-parallel across them (repro.platform.elastic).

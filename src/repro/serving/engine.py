@@ -31,6 +31,7 @@ from repro.configs.base import ModelConfig
 from repro.models import model as model_mod
 from repro.serving.batching import GenRequest, SlotBatcher
 from repro.serving.kvcache import OutOfBlocks, PagedKVCache, paged_compatible
+from repro.serving.slot_state import SlotBatchState, find_batch_axes
 
 
 def _pick(logits, vocab_size: int, temperature: float, rng):
@@ -116,12 +117,16 @@ class ContinuousEngine:
     """Continuous-batching decode: ``n_slots`` requests in flight at once,
     one batched ``decode_step`` per emitted token wave.
 
-    Per-slot state lives host-side (``positions``/``last_tok``) while the KV
-    cache is a single device pytree of batch ``n_slots``. Admission prefills
-    the request context (prompt + any drained partial) at batch 1 and grafts
-    the resulting cache into this request's batch row; the other rows keep
-    decoding untouched. Temperature-0 outputs are token-identical to the
-    sequential :meth:`ServingEngine.generate` path.
+    Per-slot state lives host-side (``positions``/``last_tok``) while the
+    device-side decode state is a single :class:`SlotBatchState` pytree of
+    batch ``n_slots`` — per-layer K/V for GQA, latent caches for MLA,
+    SSM recurrent state + conv windows for mamba2/zamba2, or any mix the
+    model's ``cache_spec`` declares. The engine is therefore
+    architecture-agnostic: admission prefills the request context (prompt +
+    any drained partial) at batch 1 and grafts the resulting state into this
+    request's batch row; the other rows keep decoding untouched.
+    Temperature-0 outputs are token-identical to the sequential
+    :meth:`ServingEngine.generate` path.
     """
 
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
@@ -149,37 +154,27 @@ class ContinuousEngine:
         self._init_cache_state()
 
     def _init_cache_state(self):
-        """Allocate the KV state; the paged subclass swaps in a block pool."""
-        self.cache = model_mod.init_cache(self.cfg, self.n_slots, self.max_seq)
-        self._batch_axes = self._find_batch_axes(self.cfg, self.max_seq)
-        self._graft = jax.jit(self._graft_slot)
+        """Allocate the slot-state pytree; the paged subclass swaps in a
+        block pool instead."""
+        self._slot_state = SlotBatchState(self.cfg, self.n_slots, self.max_seq)
 
-    @staticmethod
-    def _find_batch_axes(cfg: ModelConfig, max_seq: int):
-        """Per-leaf batch axis of the cache pytree, found by diffing specs of
-        two batch sizes (leading scan axes make it leaf-dependent)."""
-        s1 = model_mod.cache_spec(cfg, 1, max_seq)
-        s2 = model_mod.cache_spec(cfg, 2, max_seq)
+    @property
+    def cache(self):
+        """The live decode-state pytree. Settable: the elastic-serving
+        migration protocol transplants it wholesale across meshes."""
+        if self._slot_state is None:
+            raise AttributeError(
+                "paged engine keeps decode state in the block pool (.kv), "
+                "not a dense slot-state pytree")
+        return self._slot_state.tree
 
-        def axis(a, b):
-            diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
-            assert len(diff) == 1, (a.shape, b.shape)
-            return diff[0]
-        return jax.tree.map(axis, s1, s2)
+    @cache.setter
+    def cache(self, tree):
+        self._slot_state.tree = tree
 
-    def _graft_slot(self, live, pre, slot):
-        """Write a batch-1 prefill cache into batch row ``slot`` of the live
-        cache. The prefill cache is right-padded (zeros) up to the live shape
-        on every non-batch axis first, so the whole row is overwritten and no
-        stale K/V from the slot's previous occupant survives."""
-        def one(z, c, ax):
-            target = list(z.shape)
-            target[ax] = 1
-            pad = [(0, t - s) for t, s in zip(target, c.shape)]
-            assert all(hi >= 0 for _, hi in pad), (z.shape, c.shape, ax)
-            c = jnp.pad(c.astype(z.dtype), pad)
-            return jax.lax.dynamic_update_slice_in_dim(z, c, slot, axis=ax)
-        return jax.tree.map(one, live, pre, self._batch_axes)
+    # kept as a staticmethod seam for callers that need the layout without an
+    # engine (tests, migration planners)
+    _find_batch_axes = staticmethod(find_batch_axes)
 
     # --- request lifecycle ----------------------------------------------------
     def add(self, req: GenRequest):
@@ -225,7 +220,7 @@ class ContinuousEngine:
         state and no admission token should be emitted (paged resume)."""
         logits, pre = self._prefill(
             self.params, {"tokens": jnp.asarray([context], jnp.int32)})
-        self.cache = self._graft(self.cache, pre, jnp.int32(slot))
+        self._slot_state.graft(pre, slot)
         self.prefill_tokens += len(context)
         return logits
 
@@ -406,7 +401,10 @@ class PagedContinuousEngine(ContinuousEngine):
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  attn: str = "gather", max_parked: int = 64,
                  interpret: Optional[bool] = None):
-        assert attn in ("gather", "kernel"), attn
+        if attn not in ("gather", "kernel"):
+            raise ValueError(
+                f"PagedContinuousEngine: unknown attn={attn!r}; allowed "
+                f"values: ('gather', 'kernel')")
         assert max_seq % block_size == 0, (max_seq, block_size)
         self.block_size = block_size
         self.max_blocks = max_seq // block_size
@@ -425,6 +423,7 @@ class PagedContinuousEngine(ContinuousEngine):
 
     def _init_cache_state(self):
         from repro.models import transformer
+        self._slot_state = None   # state lives in the block pool, not a tree
         self.kv = PagedKVCache(self.cfg, self.n_blocks, self.block_size)
         self._slot_seq: List[Optional[Hashable]] = [None] * self.n_slots
         self._parked: Dict[int, Tuple[int, ...]] = {}   # req.id -> context

@@ -90,3 +90,47 @@ def test_moe_configs():
     ds = get_config("deepseek-v2-lite-16b")
     assert ds.n_experts == 64 and ds.top_k == 6 and ds.kv_lora_rank == 512
     assert ds.n_shared_experts == 2 and ds.first_dense_layers == 1
+
+
+# --- kernel_impls policy ------------------------------------------------------
+def test_supported_kernel_sites_per_arch():
+    from repro.configs.base import supported_kernel_sites
+    expect = {
+        "qwen2.5-3b": {"attention", "rmsnorm"},
+        "mixtral-8x22b": {"attention", "moe", "rmsnorm"},
+        "deepseek-v2-lite-16b": {"moe", "rmsnorm"},   # MLA: no flash twin
+        "mamba2-2.7b": {"rmsnorm", "ssm"},
+        "zamba2-2.7b": {"attention", "rmsnorm", "ssm"},
+        "hubert-xlarge": {"attention"},               # gelu: no rmsnorm
+    }
+    for arch, sites in expect.items():
+        assert supported_kernel_sites(get_config(arch, smoke=True)) == sites, arch
+
+
+def test_kernel_impls_validation_errors():
+    from repro.configs.base import kernel_impl, with_kernel_impls
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    with pytest.raises(ValueError, match="unknown site 'conv'"):
+        dataclasses.replace(cfg, kernel_impls={"conv": "kernel"})
+    with pytest.raises(ValueError, match="unknown impl 'pallas'"):
+        dataclasses.replace(cfg, kernel_impls={"rmsnorm": "pallas"})
+    with pytest.raises(ValueError, match="unsupported for arch"):
+        dataclasses.replace(get_config("mamba2-2.7b", smoke=True),
+                            kernel_impls={"attention": "kernel"})
+    with pytest.raises(ValueError, match="unknown kernel site 'conv'"):
+        kernel_impl(cfg, "conv")
+    with pytest.raises(ValueError, match="with_kernel_impls"):
+        with_kernel_impls(cfg, "fastest")
+
+
+def test_with_kernel_impls_shorthands():
+    from repro.configs.base import kernel_impl, with_kernel_impls
+    cfg = get_config("zamba2-2.7b", smoke=True)
+    auto = with_kernel_impls(cfg, "auto")
+    assert dict(auto.kernel_impls) == {"attention": "kernel",
+                                       "rmsnorm": "kernel", "ssm": "kernel"}
+    assert kernel_impl(auto, "moe") == "reference"   # unset site defaults
+    assert with_kernel_impls(cfg, "reference").kernel_impls == ()
+    one = with_kernel_impls(cfg, {"ssm": "kernel"})
+    assert kernel_impl(one, "ssm") == "kernel"
+    assert kernel_impl(one, "attention") == "reference"

@@ -41,6 +41,22 @@ def test_flash_attention_matches_ref(b, h, kv, sq, sk, d, causal, window, dtype)
     np.testing.assert_allclose(out.astype(np.float32), exp.astype(np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("window", [1, 64, 128, 256, 384])
+def test_flash_attention_sliding_window_edges(window):
+    """Window extremes: 1 (self only), block-boundary, == seq (full causal),
+    > seq (degenerates to full causal)."""
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (1, 4, 256, 32))
+    k = jax.random.normal(ks[1], (1, 2, 256, 32))
+    v = jax.random.normal(ks[2], (1, 2, 256, 32))
+    out = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, exp, atol=5e-5, rtol=5e-4)
+    if window >= 256:   # window covering the whole sequence == plain causal
+        full = ref.flash_attention_ref(q, k, v, causal=True, window=None)
+        np.testing.assert_allclose(out, full, atol=5e-5, rtol=5e-4)
+
+
 def test_flash_attention_block_shape_invariance():
     """Same math regardless of block tiling choice."""
     ks = jax.random.split(RNG, 3)
@@ -214,3 +230,68 @@ def test_paged_attention_op_wrapper_defaults():
     out = paged_attention_op(q, k_pool, v_pool, tables, lens)
     exp = ref.paged_attention_ref(q, k_pool, v_pool, tables, lens)
     np.testing.assert_allclose(out, exp, atol=5e-5, rtol=5e-4)
+
+
+def test_moe_gmm_op_wrapper_defaults():
+    """The ops-layer wrapper picks interpret mode from the backend default."""
+    from repro.kernels.ops import moe_gmm_op
+    t, d, f, e, bt = 64, 16, 24, 2, 32
+    lhs = jax.random.normal(RNG, (t, d))
+    rhs = jax.random.normal(jax.random.PRNGKey(2), (e, d, f))
+    te = jnp.array([0, 1], jnp.int32)
+    out = moe_gmm_op(lhs, rhs, te, block_t=bt, block_f=8)
+    exp = ref.moe_gmm_ref(lhs, rhs, jnp.array([bt, bt], jnp.int32))
+    np.testing.assert_allclose(out, exp, atol=1e-5, rtol=1e-5)
+
+
+def test_moe_gmm_ragged_groups_via_padding():
+    """The dropless dispatch recipe: RAGGED group sizes (not multiples of
+    block_t) padded with pad_group_sizes, rows scattered to padded offsets,
+    per-tile experts from searchsorted — gathered output must equal the
+    ragged-oracle per-group matmul."""
+    from repro.kernels.ops import pad_group_sizes
+    t, d, f, e, bt = 90, 16, 24, 3, 16
+    gs = jnp.array([37, 0, 53], jnp.int32)        # ragged + an EMPTY group
+    assert int(gs.sum()) == t
+    lhs = jax.random.normal(RNG, (t, d))
+    rhs = jax.random.normal(jax.random.PRNGKey(2), (e, d, f))
+    padded, offs = pad_group_sizes(gs, bt)
+    t_pad = int(padded.sum())
+    raw_offs = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                                jnp.cumsum(gs)]).astype(jnp.int32)
+    row_e = jnp.repeat(jnp.arange(e, dtype=jnp.int32), gs,
+                       total_repeat_length=t)
+    dest = jnp.arange(t, dtype=jnp.int32) + (offs[:-1] - raw_offs[:-1])[row_e]
+    buf = jnp.zeros((t_pad, d)).at[dest].set(lhs)
+    tile_starts = jnp.arange(t_pad // bt, dtype=jnp.int32) * bt
+    te = jnp.clip(jnp.searchsorted(offs, tile_starts, side="right") - 1,
+                  0, e - 1).astype(jnp.int32)
+    out = moe_gmm(buf, rhs, te, block_t=bt, block_f=8, interpret=True)[dest]
+    exp = ref.moe_gmm_ref(lhs, rhs, gs)
+    np.testing.assert_allclose(out, exp, atol=1e-5, rtol=1e-5)
+
+
+# --- dispatch policy plumbing ------------------------------------------------
+def test_interpret_env_override(monkeypatch):
+    """REPRO_PALLAS_INTERPRET forces interpret mode on/off; junk values name
+    the allowed spellings; the default is memoized per process."""
+    from repro.kernels import ops
+    ops._default_interpret.cache_clear()
+    try:
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+        assert ops._default_interpret() is True
+        ops._default_interpret.cache_clear()
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "off")
+        assert ops._default_interpret() is False
+        ops._default_interpret.cache_clear()
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "maybe")
+        with pytest.raises(ValueError, match="REPRO_PALLAS_INTERPRET"):
+            ops._default_interpret()
+        ops._default_interpret.cache_clear()
+        monkeypatch.delenv("REPRO_PALLAS_INTERPRET")
+        assert ops._default_interpret() == (jax.default_backend() != "tpu")
+        # memoized: a later env change without cache_clear is not observed
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "maybe")
+        assert ops._default_interpret() == (jax.default_backend() != "tpu")
+    finally:
+        ops._default_interpret.cache_clear()

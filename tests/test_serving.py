@@ -198,6 +198,94 @@ def test_continuous_equals_sequential_temperature0(arch):
 
 
 @jaxtier
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "mixtral-8x22b",
+                                  "deepseek-v2-lite-16b", "mamba2-2.7b",
+                                  "zamba2-2.7b"])
+def test_kernel_impls_token_identity_per_arch(arch):
+    """Every zoo family (GQA, MoE+SWA, MLA+MoE, SSM, hybrid) serves with
+    kernel_impls="auto" through the ContinuousEngine emitting temperature-0
+    tokens bit-identical to the reference einsum/scan leg at float32."""
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.configs.base import supported_kernel_sites, with_kernel_impls
+    from repro.models import init_params
+    from repro.serving.engine import ContinuousEngine
+    cfg = dataclasses.replace(get_config(arch, smoke=True), dtype="float32")
+    assert supported_kernel_sites(cfg)   # every zoo arch has a kernel leg
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
+               for n in (6, 10, 8, 7)]
+    outs = {}
+    for leg, leg_cfg in (("reference", cfg),
+                         ("kernel", with_kernel_impls(cfg, "auto"))):
+        eng = ContinuousEngine(leg_cfg, params, n_slots=2, max_seq=48)
+        for i, p in enumerate(prompts):
+            eng.add(GenRequest(id=i, prompt=p, max_new=6))
+        got = {r.id: r.generated for r in eng.run()}
+        outs[leg] = [got[i] for i in range(len(prompts))]
+    assert outs["kernel"] == outs["reference"]
+
+
+@jaxtier
+@pytest.mark.parametrize("arch", ["deepseek-v2-lite-16b", "mamba2-2.7b",
+                                  "zamba2-2.7b"])
+def test_drain_resume_nontransformer_state(arch):
+    """The slot-state protocol generalizes drain/resume beyond dense K/V:
+    MLA latents, SSM recurrent+conv state, and the hybrid union all resume a
+    preempted stream token-identically (resumed state is re-prefilled, so
+    any stale slot row from the previous occupant must be fully grafted
+    over). float32: resume re-prefills prompt+partial in ONE pass, and MLA's
+    absorbed-decode math / the SSM chunk boundaries round differently from
+    incremental decode at bf16 — f32 is the bit-identity regime."""
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving.engine import ContinuousEngine
+    cfg = dataclasses.replace(get_config(arch, smoke=True), dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
+               for n in (8, 11)]
+    ref_eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=48)
+    for i, p in enumerate(prompts):
+        ref_eng.add(GenRequest(id=i, prompt=p, max_new=10))
+    ref = {r.id: r.generated for r in ref_eng.run()}
+
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=48)
+    for i, p in enumerate(prompts):
+        eng.add(GenRequest(id=i, prompt=p, max_new=10))
+    eng.step()
+    eng.step()
+    partials = eng.drain()
+    assert all(0 < len(r.generated) < 10 for r in partials)
+    for r in partials:
+        eng.add(r)
+    got = {r.id: r.generated for r in eng.run()}
+    assert got == ref
+
+
+@jaxtier
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "deepseek-v2-lite-16b",
+                                  "mamba2-2.7b", "zamba2-2.7b"])
+def test_slot_state_single_batch_axis(arch):
+    """find_batch_axes identifies exactly one batch axis per decode-state
+    leaf for every cache family (dense K/V, MLA latents, SSM state+conv,
+    hybrid union)."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import model as model_mod
+    from repro.serving.slot_state import find_batch_axes
+    cfg = get_config(arch, smoke=True)
+    axes = find_batch_axes(cfg, 32)
+    spec = model_mod.cache_spec(cfg, 3, 32)
+    for ax, leaf in zip(jax.tree.leaves(axes), jax.tree.leaves(spec)):
+        assert leaf.shape[ax] == 3   # the axis found really is batch
+
+
+@jaxtier
 def test_continuous_eos_frees_slot_early(qwen_setup):
     """A slot whose greedy stream hits eos_id frees before max_new and is
     refilled without stopping the loop."""

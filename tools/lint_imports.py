@@ -8,6 +8,9 @@ Enforces the package layering that makes the seams composable:
     repro.distributed (JAX substrate)   imports no sim/policy/composition
                                         layer (it must stay usable without a
                                         simulator — see elastic_serving)
+    repro.kernels (Pallas leaf compute) imports no serving/platform/faas
+                                        layer (models dispatch into kernels
+                                        via kernel_impls, never the reverse)
     repro.platform (composition)        may import all of them
 
 Violations of that order — and *any* import cycle between top-level
@@ -29,6 +32,9 @@ LAYERING = {
     "core": {"faas", "platform", "distributed"},
     "faas": {"platform"},
     "distributed": {"core", "faas", "platform"},
+    # kernels are leaf compute: models/serving dispatch INTO them via the
+    # kernel_impls policy, never the other way around
+    "kernels": {"serving", "platform", "faas"},
 }
 
 
