@@ -33,6 +33,8 @@ import time
 def _serve(eng, gens):
     """Drive to quiescence tracking peak concurrent slots; returns
     (wall_s, peak_slots, {id: tokens})."""
+    import jax
+
     t0 = time.perf_counter()
     for g in gens:
         eng.add(g)
@@ -40,6 +42,7 @@ def _serve(eng, gens):
     while eng.batcher.active():
         eng.step()
         peak = max(peak, len(eng.batcher.active()))
+    jax.block_until_ready(eng.device_state)
     wall = time.perf_counter() - t0
     done = {f.id: list(f.generated) for f in eng.batcher.finished}
     eng.batcher.finished.clear()

@@ -31,10 +31,13 @@ def _percentiles(xs):
 
 def _run_sequential(engine, prompts, n_new):
     """Serve serially; per-request completion = offset in the serialized run."""
+    import jax
+
     t0 = time.perf_counter()
     lat, outs = [], []
     for p in prompts:
         out = engine.generate(np.asarray([p], np.int32), n_new)
+        jax.block_until_ready(out)
         lat.append(time.perf_counter() - t0)
         outs.append(out[0].tolist())
     wall = time.perf_counter() - t0
@@ -44,10 +47,13 @@ def _run_sequential(engine, prompts, n_new):
 def _run_continuous(engine, prompts, n_new):
     """One engine.serve() call — the same timed loop the batched executor
     charges the sim from, so the published numbers measure its semantics."""
+    import jax
+
     from repro.serving.batching import GenRequest
     t0 = time.perf_counter()
     finished_at = engine.serve([GenRequest(id=i, prompt=list(p), max_new=n_new)
                                 for i, p in enumerate(prompts)])
+    jax.block_until_ready(engine.device_state)
     wall = time.perf_counter() - t0
     done = {f.id: f.generated for f in engine.batcher.finished}
     engine.batcher.finished.clear()

@@ -38,6 +38,8 @@ SMOKE_ARCHS = ("qwen2.5-3b", "deepseek-v2-lite-16b", "mamba2-2.7b")
 
 def _serve(cfg, params, prompts, n_new, n_slots, max_seq):
     """One fresh engine, one serve() call; returns (wall_s, per-req tokens)."""
+    import jax
+
     from repro.serving.batching import GenRequest
     from repro.serving.engine import ContinuousEngine
 
@@ -49,6 +51,7 @@ def _serve(cfg, params, prompts, n_new, n_slots, max_seq):
     engine.batcher.finished.clear()
     t0 = time.perf_counter()
     engine.serve(reqs)
+    jax.block_until_ready(engine.device_state)
     wall = time.perf_counter() - t0
     done = {f.id: list(f.generated) for f in engine.batcher.finished}
     return wall, [done[i] for i in range(len(prompts))]

@@ -10,6 +10,9 @@ from repro.configs.base import (
     ModelConfig,
     ShapeConfig,
     cell_is_runnable,
+    kernel_impl,
+    supported_kernel_sites,
+    with_kernel_impls,
 )
 
 _MODULES = {
@@ -53,4 +56,7 @@ __all__ = [
     "all_cells",
     "cell_is_runnable",
     "get_config",
+    "kernel_impl",
+    "supported_kernel_sites",
+    "with_kernel_impls",
 ]

@@ -16,7 +16,8 @@ from repro.core.invoker import Invoker
 from repro.core.pilot import FIB_LENGTHS_MIN, JobManager
 from repro.core.cluster import PilotJob, SlurmSim
 from repro.core.queues import Request, Topic
-from repro.core.routing import HashRouter, LeastLoadedRouter, LocalityRouter
+from repro.core.routing import (DeadlineAwareRouter, HashRouter,
+                                LeastLoadedRouter, LocalityRouter)
 from repro.core.trace import IdleWindow, TraceConfig, generate_trace, trace_stats
 from repro.core.wrapper import CommercialBackend, FaaSWrapper
 
@@ -24,7 +25,8 @@ __all__ = [
     "Controller", "JOB_LENGTH_SETS", "simulate_coverage", "table1",
     "Simulator", "Invoker", "FIB_LENGTHS_MIN", "JobManager", "PilotJob",
     "SlurmSim", "Request", "Topic",
-    "HashRouter", "LeastLoadedRouter", "LocalityRouter",
+    "DeadlineAwareRouter", "HashRouter", "LeastLoadedRouter",
+    "LocalityRouter",
     "IdleWindow", "TraceConfig", "generate_trace",
     "trace_stats", "CommercialBackend", "FaaSWrapper",
 ]

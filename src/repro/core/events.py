@@ -127,9 +127,12 @@ class IntervalRecorder:
         starts = sorted(s for s, e, t in self.intervals if t == tag)
         ends = sorted(e for s, e, t in self.intervals if t == tag)
         out = []
-        t = t0
-        while t <= t1:
+        # sample points derived from an integer index: repeated `t += step`
+        # accumulates rounding error and drifts off the k*step lattice
+        for k in range(int((t1 - t0) / step + 1e-9) + 1):
+            t = t0 + k * step
+            if t > t1:
+                break
             out.append(bisect.bisect_right(starts, t)
                        - bisect.bisect_right(ends, t))
-            t += step
         return out

@@ -197,13 +197,16 @@ def idle_count_series(windows: Sequence[IdleWindow], horizon: float, step: float
     events.sort()
     out = []
     i, cur = 0, 0
-    t = 0.0
-    while t <= horizon:
+    # sample points derived from an integer index: repeated `t += step`
+    # accumulates rounding error and drifts off the k*step lattice
+    for k in range(int(horizon / step + 1e-9) + 1):
+        t = k * step
+        if t > horizon:
+            break
         while i < len(events) and events[i][0] <= t:
             cur += events[i][1]
             i += 1
         out.append(cur)
-        t += step
     return np.array(out)
 
 

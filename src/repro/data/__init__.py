@@ -1,0 +1,25 @@
+"""Input pipeline. Lazy export (PEP 562): importing ``repro.data`` must
+not pay the JAX import."""
+from __future__ import annotations
+
+import importlib
+from typing import Any
+
+_EXPORTS = {
+    "DataPipeline": "repro.data.pipeline",
+}
+
+__all__ = ["DataPipeline"]
+
+
+def __getattr__(name: str) -> Any:
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    return getattr(importlib.import_module(module), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

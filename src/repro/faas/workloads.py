@@ -49,8 +49,12 @@ class FunctionClass:
     batch_size: int = 200               # requests per spike
 
     def __post_init__(self):
-        assert self.exec_dist in EXEC_DISTS, self.exec_dist
-        assert self.arrival in ARRIVALS, self.arrival
+        if self.exec_dist not in EXEC_DISTS:
+            raise ValueError(f"unknown exec_dist={self.exec_dist!r}; "
+                             f"allowed values: {tuple(EXEC_DISTS)}")
+        if self.arrival not in ARRIVALS:
+            raise ValueError(f"unknown arrival={self.arrival!r}; "
+                             f"allowed values: {tuple(ARRIVALS)}")
 
     # --- execution times -----------------------------------------------------
     def sample_exec(self, rng: np.random.Generator) -> float:
@@ -139,13 +143,16 @@ class FunctionClass:
 
     def _batches(self, duration):
         out: List[float] = []
-        t = self.batch_every
-        while t < duration:
+        # spike times from an integer index: repeated `t += batch_every`
+        # accumulates rounding error and drifts off the k*period lattice
+        for k in range(1, int(duration / self.batch_every + 1e-9) + 1):
+            t = k * self.batch_every
+            if t >= duration:
+                break
             # spread each spike over one second (client fan-out jitter);
             # clamp the jittered tail to the horizon
             out.extend(ti for i in range(self.batch_size)
                        if (ti := t + i / max(self.batch_size, 1)) < duration)
-            t += self.batch_every
         return np.array(out)
 
     def fn_name(self, i: int) -> str:

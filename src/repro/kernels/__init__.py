@@ -1,3 +1,59 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas leaf-compute kernels + their jit'd ``*_op`` wrappers.
+
+Exports resolve lazily (PEP 562): importing ``repro.kernels`` must never
+pay the JAX import, so pure-sim runs (and the fast test tier) stay light.
+Layering: this package imports no serving/platform/faas code — models and
+engines dispatch INTO it via the ``kernel_impls`` policy.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any
+
+# public name -> defining submodule (resolved on first attribute access)
+_EXPORTS = {
+    "default_interpret": "repro.kernels.ops",
+    "flash_attention": "repro.kernels.flash_attention",
+    "flash_attention_op": "repro.kernels.ops",
+    "moe_gmm": "repro.kernels.moe_gmm",
+    "moe_gmm_capacity": "repro.kernels.ops",
+    "moe_gmm_op": "repro.kernels.ops",
+    "pad_group_sizes": "repro.kernels.ops",
+    "paged_attention": "repro.kernels.paged_attention",
+    "paged_attention_op": "repro.kernels.ops",
+    "rmsnorm": "repro.kernels.rmsnorm",
+    "rmsnorm_op": "repro.kernels.ops",
+    "ssd": "repro.kernels.ssd",
+    "ssd_op": "repro.kernels.ops",
+    "tile_experts_for_capacity": "repro.kernels.ops",
+}
+
+__all__ = [
+    "default_interpret",
+    "flash_attention",
+    "flash_attention_op",
+    "moe_gmm",
+    "moe_gmm_capacity",
+    "moe_gmm_op",
+    "pad_group_sizes",
+    "paged_attention",
+    "paged_attention_op",
+    "rmsnorm",
+    "rmsnorm_op",
+    "ssd",
+    "ssd_op",
+    "tile_experts_for_capacity",
+]
+
+
+def __getattr__(name: str) -> Any:
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    return getattr(importlib.import_module(module), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -42,6 +42,13 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def default_interpret() -> bool:
+    """Public accessor for the interpret-mode default — call sites outside
+    ``repro.kernels`` use this; the underscore impl stays the lru_cache
+    handle tests clear."""
+    return _default_interpret()
+
+
 def flash_attention_op(q, k, v, *, causal=True, window=None, scale=None,
                        block_q=128, block_k=128, interpret=None):
     return flash_attention(q, k, v, causal=causal, window=window, scale=scale,

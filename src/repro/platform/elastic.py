@@ -135,7 +135,8 @@ class GangPool:
                  migrate: bool = True, form_warmup: float = 20.0,
                  model_bytes: float = 6e9, kv_bytes: float = 1e9,
                  min_members: int = 1, gang_concurrency: Optional[int] = None):
-        assert gang_size >= 1, gang_size
+        if gang_size < 1:
+            raise ValueError(f"gang_size={gang_size} must be >= 1")
         self.platform = platform
         self.sim = platform.sim
         self.controller = platform.controller

@@ -65,7 +65,9 @@ def prompt_for_fn(fn: str, vocab_size: int, prompt_len: int,
     body = rng.integers(0, vocab_size, size=prompt_len).astype(int).tolist()
     if prefix_len <= 0:
         return body
-    assert prefix_len < prompt_len, (prefix_len, prompt_len)
+    if prefix_len >= prompt_len:
+        raise ValueError(f"prefix_len={prefix_len} must be < "
+                         f"prompt_len={prompt_len}")
     pre = tenant_prefix(tenant if tenant is not None else tenant_of(fn),
                         vocab_size, prefix_len)
     return pre + body[prefix_len:]
@@ -117,7 +119,9 @@ class BatchedServingExecutor:
     def __init__(self, engine, prompt_len: int = 16, n_new: int = 8,
                  resume_bucket: int = 4, prefix_len: int = 0):
         from repro.serving.engine import ContinuousEngine
-        assert isinstance(engine, ContinuousEngine), type(engine)
+        if not isinstance(engine, ContinuousEngine):
+            raise TypeError(f"batched-serving needs a ContinuousEngine; got "
+                            f"{type(engine).__name__}")
         self.engine = engine
         self.prompt_len = prompt_len
         self.n_new = n_new

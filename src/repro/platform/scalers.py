@@ -34,7 +34,9 @@ def build_adaptive(platform: "Platform", **params) -> AdaptiveJobManager:
     queue depth, and recent idle-window lengths; expedites Slurm passes
     under pressure."""
     sc = platform.scenario
-    assert sc.scheduling.model == "fib", "adaptive supply drives the fib mix"
+    if sc.scheduling.model != "fib":
+        raise ValueError(f"scaler 'adaptive' drives the fib length mix; got "
+                         f"scheduling.model={sc.scheduling.model!r}")
     return AdaptiveJobManager(platform.sim, platform.slurm,
                               platform.controller, horizon=sc.duration,
                               metrics=platform.metrics, **params)

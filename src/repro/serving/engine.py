@@ -49,7 +49,9 @@ _CACHE_BUCKET = 64  # sequential-path caches sized in buckets, not max_seq
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, max_seq: int = 512):
-        assert cfg.is_autoregressive, "encoder-only archs are scored, not decoded"
+        if not cfg.is_autoregressive:
+            raise ValueError(f"arch {cfg.arch_id!r} is encoder-only: it is "
+                             f"scored, not decoded")
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
@@ -132,8 +134,11 @@ class ContinuousEngine:
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
                  max_seq: int = 512, eos_id: Optional[int] = None,
                  temperature: float = 0.0, seed: int = 0):
-        assert cfg.is_autoregressive, "encoder-only archs are scored, not decoded"
-        assert n_slots >= 1
+        if not cfg.is_autoregressive:
+            raise ValueError(f"arch {cfg.arch_id!r} is encoder-only: it is "
+                             f"scored, not decoded")
+        if n_slots < 1:
+            raise ValueError(f"n_slots={n_slots} must be >= 1")
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -171,6 +176,13 @@ class ContinuousEngine:
     @cache.setter
     def cache(self, tree):
         self._slot_state.tree = tree
+
+    @property
+    def device_state(self):
+        """Device-resident decode state, for ``jax.block_until_ready`` at
+        timing boundaries. Unlike ``cache`` this is defined for every
+        engine flavour (the paged subclass returns its block pools)."""
+        return self._slot_state.tree
 
     # kept as a staticmethod seam for callers that need the layout without an
     # engine (tests, migration planners)
@@ -405,7 +417,9 @@ class PagedContinuousEngine(ContinuousEngine):
             raise ValueError(
                 f"PagedContinuousEngine: unknown attn={attn!r}; allowed "
                 f"values: ('gather', 'kernel')")
-        assert max_seq % block_size == 0, (max_seq, block_size)
+        if max_seq % block_size != 0:
+            raise ValueError(f"max_seq={max_seq} must be a multiple of "
+                             f"block_size={block_size}")
         self.block_size = block_size
         self.max_blocks = max_seq // block_size
         if n_blocks is None:
@@ -415,11 +429,15 @@ class PagedContinuousEngine(ContinuousEngine):
         self.attn = attn
         self.max_parked = max_parked
         if interpret is None:
-            from repro.kernels.ops import _default_interpret
-            interpret = _default_interpret()
+            from repro.kernels.ops import default_interpret
+            interpret = default_interpret()
         self._interpret = interpret
         super().__init__(cfg, params, n_slots, max_seq, eos_id, temperature,
                          seed)
+
+    @property
+    def device_state(self):
+        return (self.kv.k_pool, self.kv.v_pool)
 
     def _init_cache_state(self):
         from repro.models import transformer

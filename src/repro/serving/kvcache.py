@@ -49,7 +49,9 @@ class BlockAllocator:
     """
 
     def __init__(self, n_blocks: int, block_size: int):
-        assert n_blocks >= 1 and block_size >= 1
+        if n_blocks < 1 or block_size < 1:
+            raise ValueError(f"n_blocks={n_blocks} and "
+                             f"block_size={block_size} must both be >= 1")
         self.n_blocks = n_blocks
         self.block_size = block_size
         self.refcount = np.zeros(n_blocks, np.int64)
@@ -206,8 +208,9 @@ class PagedKVCache:
 
     def __init__(self, cfg: ModelConfig, n_blocks: int, block_size: int,
                  dtype=None):
-        assert paged_compatible(cfg), \
-            f"paged KV layout not defined for family={cfg.family!r}"
+        if not paged_compatible(cfg):
+            raise ValueError(
+                f"paged KV layout not defined for family={cfg.family!r}")
         ops = _device_ops()
         jnp = ops["jnp"]
         self.cfg = cfg

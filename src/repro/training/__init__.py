@@ -1,0 +1,27 @@
+"""Training loop pieces (optimizer + train step). Lazy exports (PEP 562):
+importing ``repro.training`` must not pay the JAX import."""
+from __future__ import annotations
+
+import importlib
+from typing import Any
+
+_EXPORTS = {
+    "OptimizerConfig": "repro.training.optimizer",
+    "init_opt_state": "repro.training.optimizer",
+    "make_train_step": "repro.training.train_step",
+}
+
+__all__ = ["OptimizerConfig", "init_opt_state", "make_train_step"]
+
+
+def __getattr__(name: str) -> Any:
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    return getattr(importlib.import_module(module), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -1,0 +1,537 @@
+"""reprolint (tools/analyze) — per-rule fire/no-fire fixtures, suppression
+and baseline round-trips, and the repo self-check.
+
+Fixtures are in-memory FileUnits at virtual repo-relative paths, so each
+rule's scoping (src/repro vs benchmarks vs repro.core) is exercised without
+touching the tree. The self-check pins the real repo at zero non-baselined
+findings — the baseline is committed empty and must stay that way.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TOOLS = os.path.join(REPO, "tools")
+if TOOLS not in sys.path:
+    sys.path.insert(0, TOOLS)
+
+from analyze.core import (FileUnit, Finding, RepoContext, collect_units,
+                          load_baseline, run_passes, write_baseline)
+from analyze.passes import PASS_CLASSES, all_passes, rule_catalog
+from analyze.passes.pallas_callsite import PallasCallsitePass
+
+ALL_RULES = tuple(rule_catalog())
+
+
+def _run(sources, passes=None):
+    """sources: {virtual_path: code}; returns (findings, n_suppressed)."""
+    units = [FileUnit(p, textwrap.dedent(src))
+             for p, src in sorted(sources.items())]
+    return run_passes(units, passes if passes is not None else all_passes())
+
+
+def _rules(src, path="src/repro/core/x.py", **extra):
+    sources = {path: src}
+    sources.update(extra)
+    return [f.rule for f in _run(sources)[0]]
+
+
+# --- rule catalog ---------------------------------------------------------------
+def test_rule_codes_are_unique_and_stable():
+    seen = {}
+    for cls in PASS_CLASSES:
+        for code in cls.rules:
+            assert code not in seen, f"{code} claimed by {seen[code]} and {cls}"
+            seen[code] = cls
+    assert set(seen) == set(ALL_RULES)
+    assert len(ALL_RULES) == 15
+
+
+# --- RPL101/102/103 determinism -------------------------------------------------
+def test_rpl101_hash_and_id_fire():
+    rules = _rules("""
+        def seed_for(name):
+            return hash(name) ^ id(name)
+        """)
+    assert rules.count("RPL101") == 2
+
+
+def test_rpl101_crc32_is_clean():
+    assert "RPL101" not in _rules("""
+        import zlib
+
+        def seed_for(name):
+            return zlib.crc32(name.encode())
+        """)
+
+
+def test_rpl102_module_level_rng_fires():
+    rules = _rules("""
+        import random
+        import numpy as np
+
+        def draw():
+            return random.random() + np.random.normal()
+
+        def make_rng():
+            return np.random.default_rng()
+        """)
+    assert rules.count("RPL102") == 3
+
+
+def test_rpl102_seeded_generators_are_clean():
+    assert "RPL102" not in _rules("""
+        import numpy as np
+
+        def draw(seed):
+            rng = np.random.default_rng(seed)
+            return rng.normal()
+        """)
+
+
+def test_rpl103_set_iteration_fires_only_in_core():
+    src = """
+        def drain(items):
+            pending = set(items)
+            out = []
+            for x in pending:
+                out.append(x)
+            return out
+        """
+    assert "RPL103" in _rules(src, path="src/repro/core/sched.py")
+    assert "RPL103" not in _rules(src, path="src/repro/faas/sched.py")
+
+
+def test_rpl103_sorted_iteration_is_clean():
+    assert "RPL103" not in _rules("""
+        def drain(items):
+            pending = set(items)
+            return [x for x in sorted(pending)]
+        """, path="src/repro/core/sched.py")
+
+
+def test_rpl103_self_attr_set_fires():
+    assert "RPL103" in _rules("""
+        class Pool:
+            def __init__(self):
+                self.live = set()
+
+            def tick(self):
+                for x in self.live:
+                    x.step()
+        """, path="src/repro/core/pool.py")
+
+
+# --- RPL201 fp-drift ------------------------------------------------------------
+def test_rpl201_float_step_accumulation_fires():
+    assert "RPL201" in _rules("""
+        def sample(t0: float, t1: float, step: float):
+            total, t = 0.0, t0
+            while t <= t1:
+                total += t
+                t += step
+            return total
+        """)
+
+
+def test_rpl201_integer_counter_is_clean():
+    assert "RPL201" not in _rules("""
+        def count(n):
+            i = 0
+            while i < n:
+                i += 1
+            return i
+        """)
+
+
+def test_rpl201_stochastic_advance_is_clean():
+    assert "RPL201" not in _rules("""
+        def arrivals(rng, horizon: float):
+            t, out = 0.0, []
+            while t < horizon:
+                t += rng.exponential(1.0)
+                out.append(t)
+            return out
+        """)
+
+
+def test_rpl201_float_literal_step_fires():
+    assert "RPL201" in _rules("""
+        def sample(t1):
+            t = 0.0
+            while t <= t1:
+                t += 0.5
+            return t
+        """)
+
+
+# --- RPL301-303 tracer safety ---------------------------------------------------
+def test_rpl301_wallclock_in_jit_fires():
+    src = """
+        import time
+        import jax
+
+        @jax.jit
+        def traced(x):
+            t = time.perf_counter()
+            return x
+
+        def host(x):
+            return time.perf_counter()
+        """
+    findings, _ = _run({"src/repro/models/x.py": src})
+    assert [f.rule for f in findings] == ["RPL301"]
+    assert "traced" in findings[0].message
+
+
+def test_rpl302_host_conversion_in_jit_fires():
+    rules = _rules("""
+        import jax
+
+        @jax.jit
+        def traced(x):
+            return float(x) + x.sum().item()
+        """, path="src/repro/models/x.py")
+    assert rules.count("RPL302") == 2
+
+
+def test_rpl303_branch_on_traced_param_fires():
+    assert "RPL303" in _rules("""
+        import jax
+
+        @jax.jit
+        def traced(x, flag):
+            if flag:
+                return x
+            return -x
+        """, path="src/repro/models/x.py")
+
+
+def test_rpl303_static_argnames_and_is_none_are_clean():
+    assert _rules("""
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames="flag")
+        def traced(x, mask, flag):
+            if mask is None:
+                return x
+            if flag:
+                return x + mask
+            return x
+        """, path="src/repro/models/x.py") == []
+
+
+def test_rpl303_pallas_kwonly_params_are_static():
+    # kernel kwonly args are partial-bound Python values, not tracers
+    assert _rules("""
+        import functools
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _kern(x_ref, o_ref, *, causal):
+            if causal:
+                o_ref[...] = x_ref[...]
+
+        def call(x):
+            return pl.pallas_call(
+                functools.partial(_kern, causal=True),
+                grid=(1,),
+                in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+                out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+            )(x)
+        """, path="src/repro/kernels/x.py") == []
+
+
+# --- RPL304 benchmark timing ----------------------------------------------------
+_BENCH_TMPL = """
+    import time
+
+    def bench(engine, reqs):
+        t0 = time.perf_counter()
+        engine.serve(reqs)
+        {sync}wall = time.perf_counter() - t0
+        return wall
+    """
+
+
+def test_rpl304_unsynced_delta_fires():
+    src = _BENCH_TMPL.format(sync="")
+    assert "RPL304" in _rules(src, path="benchmarks/x.py")
+    # same code in src/ is out of scope for the benchmark rule
+    assert "RPL304" not in _rules(src, path="src/repro/platform/x.py")
+
+
+def test_rpl304_block_until_ready_is_clean():
+    src = _BENCH_TMPL.format(
+        sync="jax.block_until_ready(engine.device_state)\n        ")
+    assert "RPL304" not in _rules(src, path="benchmarks/x.py")
+
+
+def test_rpl304_untimed_work_is_clean():
+    assert "RPL304" not in _rules("""
+        import time
+
+        def bench(engine, reqs):
+            engine.serve(reqs)
+            t0 = time.perf_counter()
+            n = len(reqs)
+            wall = time.perf_counter() - t0
+            return wall, n
+        """, path="benchmarks/x.py")
+
+
+# --- RPL401-403 pallas call sites -----------------------------------------------
+_PALLAS_TMPL = """
+    import functools
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def _kern({kernel_args}):
+        pass
+
+    def call(x):
+        return pl.pallas_call(
+            {kernel_ref},
+            grid={grid},
+            in_specs=[pl.BlockSpec((8,), {index_map})],
+            out_specs=pl.BlockSpec((8,), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+        )(x)
+    """
+
+
+def _pallas_rules(kernel_args="x_ref, o_ref", kernel_ref="_kern",
+                  grid="(4, 4)", index_map="lambda i, j: (i, j)"):
+    src = _PALLAS_TMPL.format(kernel_args=kernel_args, kernel_ref=kernel_ref,
+                              grid=grid, index_map=index_map)
+    return _rules(src, path="src/repro/kernels/x.py")
+
+
+def test_rpl40x_consistent_site_is_clean():
+    assert _pallas_rules() == []
+
+
+def test_rpl401_index_map_arity_mismatch_fires():
+    assert "RPL401" in _pallas_rules(index_map="lambda i: (i, 0)")
+
+
+def test_rpl401_lambda_defaults_are_not_grid_args():
+    assert _pallas_rules(index_map="lambda i, j, g=4: (i, j)") == []
+
+
+def test_rpl402_kernel_signature_mismatch_fires():
+    assert "RPL402" in _pallas_rules(kernel_args="x_ref, y_ref, o_ref")
+
+
+def test_rpl403_unknown_partial_kwarg_fires():
+    rules = _pallas_rules(
+        kernel_ref="functools.partial(_kern, nope=3)")
+    assert "RPL403" in rules
+
+
+def test_pallas_pass_checks_all_five_kernel_sites():
+    """Pin coverage: every pallas_call in src/repro/kernels is resolvable
+    enough to check (a new kernel whose site the pass silently skips should
+    fail here, not pass unchecked)."""
+    units = collect_units(REPO, roots=("src/repro/kernels",))
+    p = PallasCallsitePass()
+    ctx = RepoContext(units)
+    findings = [f for u in units for f in p.run(u, ctx)]
+    assert findings == [], "\n".join(f.render() for f in findings)
+    assert p.checked_sites == 5
+
+
+# --- RPL501 config validation ---------------------------------------------------
+def test_rpl501_ctor_assert_fires_in_scoped_packages():
+    src = """
+        class Engine:
+            def __init__(self, n_slots):
+                assert n_slots > 0
+                self.n_slots = n_slots
+        """
+    assert "RPL501" in _rules(src, path="src/repro/serving/x.py")
+    assert "RPL501" in _rules(src, path="src/repro/faas/x.py")
+    # kernels/models validate with asserts on purpose — out of scope
+    assert "RPL501" not in _rules(src, path="src/repro/kernels/x.py")
+
+
+def test_rpl501_private_and_nested_scopes_are_clean():
+    assert "RPL501" not in _rules("""
+        def _helper(n):
+            assert n > 0
+
+        def public(n):
+            def inner():
+                assert n > 0
+            return inner
+
+        class Engine:
+            def step(self, n):
+                assert n > 0
+        """, path="src/repro/serving/x.py")
+
+
+def test_rpl501_public_function_assert_fires():
+    assert "RPL501" in _rules("""
+        def build(n_slots):
+            assert n_slots > 0
+            return n_slots
+        """, path="src/repro/platform/x.py")
+
+
+# --- RPL511-513 layering --------------------------------------------------------
+def test_rpl511_layering_violation_fires():
+    findings, _ = _run({
+        "src/repro/core/bad.py": "import repro.platform.api\n",
+    })
+    assert [f.rule for f in findings] == ["RPL511"]
+
+
+def test_rpl511_function_local_import_is_clean():
+    findings, _ = _run({
+        "src/repro/core/ok.py":
+            "def f():\n    import repro.platform.api\n    return 0\n",
+    })
+    assert "RPL511" not in [f.rule for f in findings]
+
+
+def test_rpl512_package_cycle_fires():
+    findings, _ = _run({
+        "src/repro/serving/a.py": "import repro.models.b\n",
+        "src/repro/models/b.py": "import repro.serving.a\n",
+    })
+    assert [f.rule for f in findings] == ["RPL512"]
+
+
+def test_rpl513_deep_import_must_be_exported():
+    serving = "from repro.core.events import Simulator\n"
+    # not exported -> fires
+    findings, _ = _run({
+        "src/repro/platform/x.py": serving,
+        "src/repro/core/__init__.py": "__all__ = []\n",
+        "src/repro/core/events.py": "class Simulator:\n    pass\n",
+    })
+    assert [f.rule for f in findings] == ["RPL513"]
+    # exported -> clean
+    findings, _ = _run({
+        "src/repro/platform/x.py": serving,
+        "src/repro/core/__init__.py": "__all__ = [\"Simulator\"]\n",
+        "src/repro/core/events.py": "class Simulator:\n    pass\n",
+    })
+    assert findings == []
+
+
+def test_rpl513_submodule_and_private_imports():
+    base = {
+        "src/repro/core/__init__.py": "__all__ = []\n",
+        "src/repro/core/events.py": "def _hidden():\n    pass\n",
+    }
+    # "from repro.core import events" names a real submodule -> clean
+    findings, _ = _run(dict(
+        base, **{"src/repro/platform/x.py": "from repro.core import events\n"}))
+    assert findings == []
+    # importing an underscore name across packages always fires
+    findings, _ = _run(dict(base, **{
+        "src/repro/platform/x.py": "from repro.core.events import _hidden\n"}))
+    assert [f.rule for f in findings] == ["RPL513"]
+
+
+# --- suppressions / baseline ----------------------------------------------------
+def test_suppression_same_line_and_line_above():
+    findings, n_supp = _run({"src/repro/core/x.py": textwrap.dedent("""
+        def f(x):
+            return hash(x)  # reprolint: disable=RPL101
+
+        def g(x):
+            # reprolint: disable=RPL101
+            return hash(x)
+        """)})
+    assert findings == []
+    assert n_supp == 2
+
+
+def test_suppression_is_rule_specific():
+    findings, n_supp = _run({"src/repro/core/x.py": textwrap.dedent("""
+        def f(x):
+            return hash(x)  # reprolint: disable=RPL102
+        """)})
+    assert [f.rule for f in findings] == ["RPL101"]
+    assert n_supp == 0
+
+
+def test_baseline_round_trip(tmp_path):
+    path = str(tmp_path / "baseline.json")
+    findings = [Finding("RPL101", "src/repro/core/x.py", 3, "msg"),
+                Finding("RPL501", "src/repro/serving/y.py", 7, "msg2")]
+    write_baseline(path, findings)
+    assert load_baseline(path) == {f.key() for f in findings}
+    assert load_baseline(str(tmp_path / "missing.json")) == set()
+
+
+# --- repo self-check ------------------------------------------------------------
+def test_repo_has_no_non_baselined_findings():
+    units = collect_units(REPO)
+    findings, _ = run_passes(units, all_passes())
+    baseline = load_baseline(os.path.join(TOOLS, "analyze", "baseline.json"))
+    new = [f for f in findings if f.key() not in baseline]
+    assert new == [], "\n".join(f.render() for f in new)
+
+
+def test_cli_clean_on_repo_and_json_report(tmp_path):
+    out = str(tmp_path / "reprolint.json")
+    proc = subprocess.run(
+        [sys.executable, "tools/analyze", "--json", out],
+        capture_output=True, text=True, timeout=120, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "reprolint OK" in proc.stdout
+    with open(out) as f:
+        report = json.load(f)
+    assert report["version"] == 1 and report["n_files"] > 50
+    assert all(f["baselined"] for f in report["findings"])
+
+
+def test_cli_nonzero_on_violation():
+    fixture = os.path.join(REPO, "src", "repro", "core",
+                           "_reprolint_fixture_tmp.py")
+    with open(fixture, "w") as f:
+        f.write("def f(x):\n    return hash(x)\n")
+    try:
+        proc = subprocess.run(
+            [sys.executable, "tools/analyze",
+             "src/repro/core/_reprolint_fixture_tmp.py"],
+            capture_output=True, text=True, timeout=120, cwd=REPO)
+    finally:
+        os.remove(fixture)
+    assert proc.returncode == 1
+    assert "RPL101" in proc.stdout
+
+
+def test_cli_list_rules():
+    proc = subprocess.run(
+        [sys.executable, "tools/analyze", "--list-rules"],
+        capture_output=True, text=True, timeout=120, cwd=REPO)
+    assert proc.returncode == 0, proc.stderr
+    for code in ALL_RULES:
+        assert code in proc.stdout
+
+
+# --- lint_imports shim ----------------------------------------------------------
+def test_lint_imports_shim_exit_and_output():
+    proc = subprocess.run(
+        [sys.executable, "tools/lint_imports.py", "src"],
+        capture_output=True, text=True, timeout=120, cwd=REPO)
+    assert proc.returncode == 0, proc.stderr
+    assert proc.stdout.startswith("import layering OK (")
+
+
+def test_lint_imports_shim_reexports_layering_table():
+    import lint_imports
+    assert lint_imports.LAYERING["core"] == {"faas", "platform", "distributed"}

@@ -1,0 +1,11 @@
+"""reprolint — AST-based static analysis for the repro codebase.
+
+Turns the bug classes past PRs fixed by hand (hash()-seeded prompts,
+``t += step`` float drift, un-synced benchmark timing, bare asserts on
+user-facing knobs, layering violations) into machine-checked rules that
+fail CI the moment a change reintroduces one.
+
+Run ``python tools/analyze --list-rules`` for the rule catalog, or see the
+"Static analysis" section of the README.
+"""
+__version__ = "1.0"

@@ -1,0 +1,15 @@
+"""Entry point so ``python tools/analyze`` works from the repo root.
+
+Running a directory puts the directory itself on sys.path; the package
+imports are absolute (``analyze.*``), so prepend the *containing* tools/
+directory instead.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from analyze.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

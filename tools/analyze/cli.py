@@ -1,0 +1,100 @@
+"""reprolint CLI.
+
+    python tools/analyze                      # analyze src/repro + benchmarks
+    python tools/analyze --list-rules         # rule catalog
+    python tools/analyze --select RPL5        # only config/layering rules
+    python tools/analyze --json out.json      # machine-readable report
+    python tools/analyze --write-baseline     # grandfather current findings
+
+Exit status: 0 when every finding is suppressed or baselined, 1 otherwise
+(2 on usage errors). CI runs this in the fast tier and uploads the JSON
+report as an artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+from analyze.core import (DEFAULT_ROOTS, Finding, collect_units,
+                          load_baseline, run_passes, write_baseline)
+from analyze.passes import all_passes, rule_catalog
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+DEFAULT_BASELINE = os.path.join(REPO_ROOT, "tools", "analyze",
+                                "baseline.json")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="reprolint",
+        description="AST-based invariant checks for the repro codebase.")
+    ap.add_argument("paths", nargs="*",
+                    help=f"repo-relative files/dirs to analyze "
+                         f"(default: {' '.join(DEFAULT_ROOTS)})")
+    ap.add_argument("--json", dest="json_out", metavar="PATH",
+                    help="write the full findings report as JSON")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline file of grandfathered findings")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="record current findings as the new baseline")
+    ap.add_argument("--select", default=None, metavar="PREFIXES",
+                    help="comma-separated rule-code prefixes (e.g. "
+                         "RPL2,RPL501)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for code, (pname, desc) in rule_catalog().items():
+            print(f"{code}  [{pname}] {desc}")
+        return 0
+
+    try:
+        units = collect_units(REPO_ROOT, args.paths or DEFAULT_ROOTS)
+    except (OSError, SyntaxError) as e:
+        print(f"reprolint: {e}", file=sys.stderr)
+        return 2
+    findings, n_suppressed = run_passes(units, all_passes())
+    if args.select:
+        prefixes = tuple(p.strip().upper() for p in args.select.split(",")
+                         if p.strip())
+        findings = [f for f in findings if f.rule.startswith(prefixes)]
+
+    if args.write_baseline:
+        write_baseline(args.baseline, findings)
+        print(f"reprolint: baselined {len(findings)} finding(s) -> "
+              f"{os.path.relpath(args.baseline, REPO_ROOT)}")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    new = [f for f in findings if f.key() not in baseline]
+    n_baselined = len(findings) - len(new)
+
+    if args.json_out:
+        report = {
+            "version": 1,
+            "n_files": len(units),
+            "n_suppressed": n_suppressed,
+            "n_baselined": n_baselined,
+            "findings": [{**f.__dict__, "baselined": f.key() in baseline}
+                         for f in findings],
+        }
+        out_dir = os.path.dirname(args.json_out)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+        with open(args.json_out, "w") as fh:
+            json.dump(report, fh, indent=1)
+            fh.write("\n")
+
+    for f in new:
+        print(f.render())
+    tail = (f"{len(units)} files, {len(rule_catalog())} rules, "
+            f"{n_baselined} baselined, {n_suppressed} suppressed")
+    if new:
+        print(f"reprolint: {len(new)} finding(s) ({tail})", file=sys.stderr)
+        return 1
+    print(f"reprolint OK ({tail})")
+    return 0

@@ -1,0 +1,194 @@
+"""reprolint core: the Pass protocol, Finding records, suppression
+comments, the committed baseline, and the runner.
+
+Design notes
+------------
+* A :class:`FileUnit` is one parsed source file; passes receive every unit
+  plus a :class:`RepoContext` so repo-level rules (layering cycles,
+  public-API exports) can see the whole tree.
+* Findings carry a stable rule code (``RPL1xx``–``RPL5xx``), a
+  repo-relative path, a line, and a severity. Codes never get reused.
+* ``# reprolint: disable=RPL201`` on the finding's line — or alone on the
+  line above — suppresses it. ``disable=ALL`` suppresses every rule.
+* The committed baseline (``tools/analyze/baseline.json``) grandfathers
+  findings by ``(rule, path, line)``; anything not in it fails the run.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+DEFAULT_ROOTS = ("src/repro", "benchmarks")
+
+
+# --- findings ------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str        # stable code, e.g. "RPL201"
+    path: str        # repo-relative, "/" separators
+    line: int
+    message: str
+    severity: str = "error"
+
+    def key(self) -> Tuple[str, str, int]:
+        return (self.rule, self.path, self.line)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} [{self.severity}] {self.message}"
+
+
+class Pass:
+    """One analysis pass. ``run`` sees each file; ``run_project`` runs once
+    after every file, for rules that need the whole repo (cycles, exports)."""
+
+    name = "base"
+    rules: Dict[str, str] = {}   # code -> one-line description
+
+    def run(self, unit: "FileUnit", ctx: "RepoContext") -> Iterable[Finding]:
+        return ()
+
+    def run_project(self, ctx: "RepoContext") -> Iterable[Finding]:
+        return ()
+
+
+# --- files ---------------------------------------------------------------------
+class FileUnit:
+    """One parsed python file (path is repo-relative with "/" separators)."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path.replace(os.sep, "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=self.path)
+
+
+class RepoContext:
+    def __init__(self, units: Sequence[FileUnit]):
+        self.units = list(units)
+        self.by_path: Dict[str, FileUnit] = {u.path: u for u in self.units}
+
+
+def collect_units(repo_root: str,
+                  roots: Sequence[str] = DEFAULT_ROOTS) -> List[FileUnit]:
+    """Parse every ``*.py`` under ``roots`` (repo-relative dirs or files)."""
+    units: List[Finding] = []
+    paths: List[str] = []
+    for root in roots:
+        abs_root = os.path.join(repo_root, root)
+        if os.path.isfile(abs_root):
+            paths.append(root)
+            continue
+        for dirpath, dirnames, files in os.walk(abs_root):
+            dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+            for fname in sorted(files):
+                if fname.endswith(".py"):
+                    rel = os.path.relpath(os.path.join(dirpath, fname),
+                                          repo_root)
+                    paths.append(rel)
+    out: List[FileUnit] = []
+    for rel in sorted(set(paths)):
+        with open(os.path.join(repo_root, rel)) as f:
+            out.append(FileUnit(rel, f.read()))
+    return out
+
+
+# --- suppressions --------------------------------------------------------------
+_SUPPRESS_RE = re.compile(r"#\s*reprolint:\s*disable=([A-Za-z0-9_,\s]+)")
+
+
+def suppressed_lines(unit: FileUnit) -> Dict[int, Set[str]]:
+    """line -> suppressed rule codes. A comment-only suppression line also
+    covers the next line, so a rule can be silenced without lengthening the
+    flagged statement."""
+    out: Dict[int, Set[str]] = {}
+    for i, ln in enumerate(unit.lines, 1):
+        m = _SUPPRESS_RE.search(ln)
+        if not m:
+            continue
+        codes = {c.strip().upper() for c in m.group(1).split(",") if c.strip()}
+        out[i] = out.get(i, set()) | codes
+        if ln.split("#", 1)[0].strip() == "":   # comment-only line
+            out[i + 1] = out.get(i + 1, set()) | codes
+    return out
+
+
+def is_suppressed(finding: Finding, supp: Dict[int, Set[str]]) -> bool:
+    codes = supp.get(finding.line, set())
+    return "ALL" in codes or finding.rule in codes
+
+
+# --- baseline ------------------------------------------------------------------
+def load_baseline(path: str) -> Set[Tuple[str, str, int]]:
+    if not os.path.exists(path):
+        return set()
+    with open(path) as f:
+        data = json.load(f)
+    return {(e["rule"], e["path"], e["line"]) for e in data.get("findings", ())}
+
+
+def write_baseline(path: str, findings: Sequence[Finding]) -> None:
+    entries = [{"rule": f.rule, "path": f.path, "line": f.line,
+                "message": f.message}
+               for f in sorted(findings, key=Finding.key)]
+    with open(path, "w") as f:
+        json.dump({"version": 1, "findings": entries}, f, indent=1)
+        f.write("\n")
+
+
+# --- runner --------------------------------------------------------------------
+def run_passes(units: Sequence[FileUnit],
+               passes: Sequence[Pass]) -> Tuple[List[Finding], int]:
+    """Returns (findings, n_suppressed); findings sorted by (path, line)."""
+    ctx = RepoContext(units)
+    supp = {u.path: suppressed_lines(u) for u in units}
+    findings: List[Finding] = []
+    n_suppressed = 0
+    for p in passes:
+        raw: List[Finding] = []
+        for unit in units:
+            raw.extend(p.run(unit, ctx))
+        raw.extend(p.run_project(ctx))
+        for f in raw:
+            if is_suppressed(f, supp.get(f.path, {})):
+                n_suppressed += 1
+            else:
+                findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings, n_suppressed
+
+
+# --- shared AST helpers --------------------------------------------------------
+def dotted(node: ast.expr) -> Optional[str]:
+    """'a.b.c' for nested Name/Attribute chains, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    return dotted(node.func)
+
+
+def is_type_checking(test: ast.expr) -> bool:
+    return ((isinstance(test, ast.Name) and test.id == "TYPE_CHECKING")
+            or (isinstance(test, ast.Attribute)
+                and test.attr == "TYPE_CHECKING"))
+
+
+def walk_skipping_defs(node: ast.AST) -> Iterable[ast.AST]:
+    """Like ast.walk over a statement body, but does not descend into nested
+    function/class definitions (their scope is not ours)."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef, ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(n))

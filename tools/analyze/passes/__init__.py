@@ -1,0 +1,32 @@
+"""Pass registry. Adding a pass: subclass ``analyze.core.Pass``, give each
+rule a fresh ``RPLnnn`` code (codes are stable and never reused), and list
+the class here."""
+from analyze.passes.config_validation import ConfigValidationPass
+from analyze.passes.determinism import DeterminismPass
+from analyze.passes.fp_drift import FpDriftPass
+from analyze.passes.layering import LayeringPass
+from analyze.passes.pallas_callsite import PallasCallsitePass
+from analyze.passes.tracer_safety import TracerSafetyPass
+
+PASS_CLASSES = (
+    DeterminismPass,
+    FpDriftPass,
+    TracerSafetyPass,
+    PallasCallsitePass,
+    ConfigValidationPass,
+    LayeringPass,
+)
+
+
+def all_passes():
+    """Fresh pass instances (passes may keep per-run state)."""
+    return [cls() for cls in PASS_CLASSES]
+
+
+def rule_catalog():
+    """code -> (pass name, description), sorted by code."""
+    out = {}
+    for cls in PASS_CLASSES:
+        for code, desc in cls.rules.items():
+            out[code] = (cls.name, desc)
+    return dict(sorted(out.items()))

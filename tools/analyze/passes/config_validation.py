@@ -1,0 +1,59 @@
+"""Config-validation pass.
+
+RPL501 — a bare ``assert`` guarding a user-facing knob disappears under
+``python -O`` and reports a bare AssertionError instead of naming the knob
+and its allowed values. PR 8 converted several of these to ValueErrors by
+hand; this rule keeps the construction/validation surfaces clean:
+
+* all asserts in ``__init__`` / ``__post_init__`` of module-level classes
+  (that is where scenario/engine knobs are validated), and
+* all asserts in *public* module-level functions (factories and helpers
+  that take knobs directly),
+
+within ``repro.serving`` / ``repro.platform`` / ``repro.configs`` /
+``repro.faas``. Private helpers, methods guarding internal invariants
+(e.g. the kvcache refcount checks), kernels, and tests stay assert-free
+territory on purpose — asserts are the right tool for unreachable states.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from analyze.core import Finding, Pass, walk_skipping_defs
+
+_SCOPES = ("src/repro/serving/", "src/repro/platform/",
+           "src/repro/configs/", "src/repro/faas/")
+_CTOR_NAMES = ("__init__", "__post_init__")
+
+
+class ConfigValidationPass(Pass):
+    name = "config-validation"
+    rules = {
+        "RPL501": "bare assert on a user-facing knob; raise ValueError",
+    }
+
+    def run(self, unit, ctx) -> Iterable[Finding]:
+        if not unit.path.startswith(_SCOPES):
+            return
+        for stmt in unit.tree.body:
+            if isinstance(stmt, ast.ClassDef):
+                for sub in stmt.body:
+                    if isinstance(sub, ast.FunctionDef) \
+                            and sub.name in _CTOR_NAMES:
+                        yield from self._asserts(unit, sub,
+                                                 f"{stmt.name}.{sub.name}")
+            elif isinstance(stmt, ast.FunctionDef) \
+                    and not stmt.name.startswith("_"):
+                yield from self._asserts(unit, stmt, stmt.name)
+
+    @staticmethod
+    def _asserts(unit, fn, where: str) -> Iterable[Finding]:
+        for node in walk_skipping_defs(fn):
+            if isinstance(node, ast.Assert):
+                yield Finding(
+                    "RPL501", unit.path, node.lineno,
+                    f"bare assert in {where} validates a user-facing knob "
+                    f"but is stripped under python -O; raise "
+                    f"ValueError/TypeError naming the knob and its allowed "
+                    f"values")

@@ -1,0 +1,223 @@
+"""Determinism pass: hash()/id()-derived values, unseeded module-level RNG,
+unordered-set iteration in the event core.
+
+The repro contract is bit-for-bit goldens (routing, serving tokens,
+traces); each rule here is a way past PRs silently broke that contract:
+
+* RPL101 — ``hash()`` is randomized per process (PYTHONHASHSEED) and
+  ``id()`` is an address; deriving seeds/keys from either made prompt
+  streams differ across invoker restarts until PR 5 switched to crc32.
+* RPL102 — the module-level ``random`` / ``np.random`` state is shared and
+  unseeded; all randomness must flow through an explicitly seeded
+  ``np.random.default_rng(seed)`` / ``random.Random(seed)``.
+* RPL103 — iterating a ``set`` in ``repro.core`` event paths makes event
+  order depend on hash seeding (the PR 3 hazard class). ``sorted(s)`` is
+  the sanctioned spelling; dicts are insertion-ordered and stay free.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+from analyze.core import Finding, Pass, call_name, walk_skipping_defs
+
+_PY_RANDOM_FNS = {
+    "random", "randint", "randrange", "uniform", "choice", "choices",
+    "shuffle", "sample", "gauss", "normalvariate", "expovariate",
+    "betavariate", "triangular", "seed", "getrandbits", "paretovariate",
+}
+_NP_RANDOM_FNS = {
+    "seed", "random", "rand", "randn", "randint", "random_sample", "choice",
+    "shuffle", "permutation", "normal", "uniform", "exponential", "poisson",
+    "standard_normal", "lognormal", "pareto", "integers", "bytes",
+}
+_SETISH_CALLS = {"set", "frozenset"}
+_SETISH_ANN = {"set", "Set", "frozenset", "FrozenSet", "MutableSet"}
+
+
+def _import_aliases(tree: ast.Module) -> Dict[str, str]:
+    """local name -> absolute dotted module/function it names, for the
+    modules RPL102 cares about."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name in ("random", "numpy", "numpy.random"):
+                    out[a.asname or a.name.split(".")[0]] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module in (
+                "random", "numpy", "numpy.random"):
+            for a in node.names:
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def _resolve_call(name: str, aliases: Dict[str, str]) -> str:
+    head, _, rest = name.partition(".")
+    if head in aliases:
+        return aliases[head] + ("." + rest if rest else "")
+    return name
+
+
+def _ann_is_set(ann: Optional[ast.expr]) -> bool:
+    if ann is None:
+        return False
+    if isinstance(ann, ast.Subscript):
+        ann = ann.value
+    if isinstance(ann, ast.Attribute):
+        return ann.attr in _SETISH_ANN
+    return isinstance(ann, ast.Name) and ann.id in _SETISH_ANN
+
+
+def _value_is_set(value: Optional[ast.expr]) -> bool:
+    if isinstance(value, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(value, ast.Call):
+        name = call_name(value)
+        return name is not None and name.split(".")[-1] in _SETISH_CALLS
+    return False
+
+
+def _set_names_in_scope(scope: ast.AST) -> Set[str]:
+    """Plain local/module names bound to a set in this scope (nested defs
+    excluded)."""
+    out: Set[str] = set()
+    for node in walk_skipping_defs(scope):
+        if isinstance(node, ast.Assign) and _value_is_set(node.value):
+            out.update(t.id for t in node.targets if isinstance(t, ast.Name))
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                            ast.Name):
+            if _ann_is_set(node.annotation) or _value_is_set(node.value):
+                out.add(node.target.id)
+    return out
+
+
+def _self_set_attrs(cls: ast.ClassDef) -> Set[str]:
+    """Attributes any method assigns a set to (``self.x = set()``), plus
+    class-body set annotations."""
+    out: Set[str] = set()
+    for stmt in cls.body:
+        if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target,
+                                                          ast.Name):
+            if _ann_is_set(stmt.annotation) or _value_is_set(stmt.value):
+                out.add(stmt.target.id)
+        if not isinstance(stmt, ast.FunctionDef):
+            continue
+        for node in walk_skipping_defs(stmt):
+            targets = ()
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+                setish = _value_is_set(node.value)
+            elif isinstance(node, ast.AnnAssign):
+                targets = (node.target,)
+                setish = _ann_is_set(node.annotation) or _value_is_set(
+                    node.value)
+            for t in targets:
+                if (setish and isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"):
+                    out.add(t.attr)
+    return out
+
+
+class DeterminismPass(Pass):
+    name = "determinism"
+    rules = {
+        "RPL101": "value derived from hash()/id() — randomized per process",
+        "RPL102": "unseeded module-level random/np.random use",
+        "RPL103": "iteration over an unordered set in repro.core",
+    }
+
+    def run(self, unit, ctx) -> Iterable[Finding]:
+        if not unit.path.startswith("src/repro/"):
+            return
+        aliases = _import_aliases(unit.tree)
+        for node in ast.walk(unit.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name in ("hash", "id"):
+                yield Finding(
+                    "RPL101", unit.path, node.lineno,
+                    f"{name}() is nondeterministic across processes "
+                    f"(PYTHONHASHSEED / object address); derive seeds from "
+                    f"zlib.crc32 or explicit ids instead")
+                continue
+            if name is None:
+                continue
+            full = _resolve_call(name, aliases)
+            if full == "numpy.random.default_rng" and not (node.args
+                                                           or node.keywords):
+                yield Finding(
+                    "RPL102", unit.path, node.lineno,
+                    "np.random.default_rng() without a seed draws OS "
+                    "entropy; pass an explicit seed")
+            elif (full.startswith("numpy.random.")
+                  and full.split(".")[-1] in _NP_RANDOM_FNS):
+                yield Finding(
+                    "RPL102", unit.path, node.lineno,
+                    f"{name}() uses the shared module-level numpy RNG; use "
+                    f"a seeded np.random.default_rng(seed) generator")
+            elif (full.startswith("random.")
+                  and full.count(".") == 1
+                  and full.split(".")[-1] in _PY_RANDOM_FNS):
+                yield Finding(
+                    "RPL102", unit.path, node.lineno,
+                    f"{name}() uses the shared module-level random state; "
+                    f"use a seeded random.Random(seed) instance")
+        if unit.path.startswith("src/repro/core/"):
+            yield from self._set_iteration(unit)
+
+    # --- RPL103 ----------------------------------------------------------------
+    def _set_iteration(self, unit) -> Iterable[Finding]:
+        module_sets = _set_names_in_scope(unit.tree)
+
+        def scopes(node, cls_attrs):
+            """Yield (scope, known set names, self-set attrs)."""
+            for stmt in ast.iter_child_nodes(node):
+                if isinstance(stmt, ast.ClassDef):
+                    yield from scopes(stmt, _self_set_attrs(stmt))
+                elif isinstance(stmt, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    local = module_sets | _set_names_in_scope(stmt)
+                    yield stmt, local, cls_attrs
+                    yield from scopes(stmt, cls_attrs)
+
+        seen = set()
+        for scope, known, cls_attrs in scopes(unit.tree, set()):
+            for node in walk_skipping_defs(scope):
+                iters: List[ast.expr] = []
+                if isinstance(node, ast.For):
+                    iters.append(node.iter)
+                elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                       ast.GeneratorExp, ast.DictComp)):
+                    iters.extend(g.iter for g in node.generators)
+                for it in iters:
+                    if id(it) in seen:
+                        continue
+                    if self._is_known_set(it, known, cls_attrs):
+                        seen.add(id(it))
+                        yield Finding(
+                            "RPL103", unit.path, it.lineno,
+                            "iteration order of a set depends on hash "
+                            "seeding; iterate sorted(...) or an ordered "
+                            "container in event-scheduling code")
+
+    @staticmethod
+    def _is_known_set(expr, known: Set[str], cls_attrs: Set[str]) -> bool:
+        if isinstance(expr, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(expr, ast.Call):
+            name = call_name(expr)
+            return name is not None and name.split(".")[-1] in _SETISH_CALLS
+        if isinstance(expr, ast.Name):
+            return expr.id in known
+        if (isinstance(expr, ast.Attribute)
+                and isinstance(expr.value, ast.Name)
+                and expr.value.id == "self"):
+            return expr.attr in cls_attrs
+        if isinstance(expr, ast.BinOp) and isinstance(
+                expr.op, (ast.BitOr, ast.BitAnd, ast.BitXor, ast.Sub)):
+            return (DeterminismPass._is_known_set(expr.left, known, cls_attrs)
+                    or DeterminismPass._is_known_set(expr.right, known,
+                                                     cls_attrs))
+        return False

@@ -1,0 +1,145 @@
+"""FP-drift pass: ``t += step`` float accumulation in loops.
+
+RPL201 — repeated float addition accumulates rounding error, so the k-th
+sample point of ``t += step`` drifts away from ``k * step``; PR 4 hit this
+in coverage sampling (interval membership flipped near window edges) and
+rewrote it as an integer index. The rule fires on a While loop whose test
+reads the accumulator and whose increment is loop-invariant float data —
+exactly the case where ``t = t0 + k * step`` is a drop-in replacement.
+Stochastic advances (``t += rng.exponential(...)``), loop-varying steps,
+and integer counters (``i += 1``) have no integer-index formulation and do
+not fire.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional, Set
+
+from analyze.core import Finding, Pass, dotted, walk_skipping_defs
+
+_ALLOWED = (ast.BinOp, ast.UnaryOp, ast.Name, ast.Attribute, ast.Constant,
+            ast.Add, ast.Sub, ast.Mult, ast.Div, ast.USub, ast.UAdd)
+
+
+def _refs(expr: ast.expr) -> Set[str]:
+    """Dotted names read by the increment (``self.batch_every`` included)."""
+    out: Set[str] = set()
+    for node in ast.walk(expr):
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            d = dotted(node)
+            if d:
+                out.add(d)
+    return out
+
+
+def _assigned_in(body) -> Set[str]:
+    """Names (and self.attr chains) assigned anywhere in these statements."""
+    out: Set[str] = set()
+    for stmt in body:
+        for node in ast.walk(stmt):
+            targets = ()
+            if isinstance(node, (ast.Assign,)):
+                targets = node.targets
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign,
+                                   ast.NamedExpr)):
+                targets = (node.target,)
+            elif isinstance(node, ast.For):
+                targets = (node.target,)
+            for t in targets:
+                for leaf in ast.walk(t):
+                    d = dotted(leaf) if isinstance(
+                        leaf, (ast.Name, ast.Attribute)) else None
+                    if d:
+                        out.add(d)
+    return out
+
+
+def _ann_is_float(ann: Optional[ast.expr]) -> bool:
+    return isinstance(ann, ast.Name) and ann.id == "float"
+
+
+class FpDriftPass(Pass):
+    name = "fp-drift"
+    rules = {
+        "RPL201": "float accumulation loop with an integer-index equivalent",
+    }
+
+    def run(self, unit, ctx) -> Iterable[Finding]:
+        if not unit.path.startswith(("src/repro/", "benchmarks/")):
+            return
+        for fn in ast.walk(unit.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            yield from self._check_function(unit, fn)
+
+    def _check_function(self, unit, fn) -> Iterable[Finding]:
+        float_params = {a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                        + fn.args.kwonlyargs)
+                        if _ann_is_float(a.annotation)}
+        float_attrs = self._float_class_fields(unit, fn)
+        for loop in walk_skipping_defs(fn):
+            if not isinstance(loop, ast.While):
+                continue
+            assigned = _assigned_in(loop.body)
+            test_names = {n.id for n in ast.walk(loop.test)
+                          if isinstance(n, ast.Name)}
+            for node in walk_skipping_defs(loop):
+                if not (isinstance(node, ast.AugAssign)
+                        and isinstance(node.op, ast.Add)
+                        and isinstance(node.target, ast.Name)):
+                    continue
+                acc = node.target.id
+                if acc not in test_names:
+                    continue   # not the loop-control accumulator
+                if not self._is_invariant_float(node.value, acc, assigned,
+                                                float_params, float_attrs):
+                    continue
+                yield Finding(
+                    "RPL201", unit.path, node.lineno,
+                    f"'{acc} += step' float accumulation drifts from "
+                    f"k * step after many iterations; derive each value "
+                    f"from an integer index instead "
+                    f"(see repro.core.coverage.simulate_coverage)")
+
+    @staticmethod
+    def _float_class_fields(unit, fn) -> Set[str]:
+        """``self.X`` chains whose class field is annotated float (the
+        dataclass-knob case: ``batch_every: float = 900.0``)."""
+        out: Set[str] = set()
+        for cls in ast.walk(unit.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            if not any(f is fn for f in ast.walk(cls)):
+                continue
+            for stmt in cls.body:
+                if (isinstance(stmt, ast.AnnAssign)
+                        and isinstance(stmt.target, ast.Name)
+                        and _ann_is_float(stmt.annotation)):
+                    out.add(f"self.{stmt.target.id}")
+        return out
+
+    @staticmethod
+    def _is_invariant_float(incr, acc: str, assigned: Set[str],
+                            float_params: Set[str],
+                            float_attrs: Set[str]) -> bool:
+        # only arithmetic over names/constants can be hoisted to k * step
+        for node in ast.walk(incr):
+            if not isinstance(node, _ALLOWED + (ast.Load,)):
+                return False
+        refs = _refs(incr)
+        # drop attribute prefixes: "self.batch_every" also refs "self"
+        roots = {r for r in refs if "." not in r}
+        if acc in refs:
+            return False
+        if any(r in assigned for r in refs) or any(r in assigned
+                                                   for r in roots):
+            return False
+        # float evidence: a float literal, a float-annotated parameter, or a
+        # float-annotated dataclass field — otherwise this may be an integer
+        # counter, which does not drift
+        has_float_const = any(isinstance(n, ast.Constant)
+                              and isinstance(n.value, float)
+                              for n in ast.walk(incr))
+        return (has_float_const
+                or bool(refs & float_params)
+                or bool(refs & float_attrs))

@@ -1,0 +1,263 @@
+"""Layering v2 pass: package layering, cycles, and public-API imports.
+
+Subsumes ``tools/lint_imports.py`` (now a thin shim over this pass):
+
+* RPL511 — module-level import that violates the package layering below.
+* RPL512 — any module-level import cycle between top-level ``repro.*``
+  packages.
+* RPL513 — public-API rule (new in this pass): a cross-package import must
+  resolve through the target package's ``__init__`` exports — either the
+  name is exported there (``__all__``, public module-level bindings) or the
+  import names a real submodule (``from repro.models import model``).
+  Importing an underscore-private name across packages always fires.
+
+Layering (kept in lockstep with the shim):
+
+    repro.core  (paper mechanisms)      imports no policy or model layer
+    repro.faas  (multi-tenant policies) may import repro.core
+    repro.distributed (JAX substrate)   imports no sim/policy/composition
+    repro.kernels (Pallas leaf compute) imports no serving/platform/faas
+    repro.platform (composition)        may import all of them
+
+Only module-level imports count for RPL511/512 (``TYPE_CHECKING`` blocks
+and function-local imports cannot create an import-time cycle); RPL513
+covers function-local imports too — deferred imports still bypass the
+public API — but not ``TYPE_CHECKING`` blocks (type-only names need not be
+runtime exports).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from analyze.core import Finding, Pass, is_type_checking
+
+# importer -> packages it must never import at module level
+LAYERING = {
+    "core": {"faas", "platform", "distributed"},
+    "faas": {"platform"},
+    "distributed": {"core", "faas", "platform"},
+    # kernels are leaf compute: models/serving dispatch INTO them via the
+    # kernel_impls policy, never the other way around
+    "kernels": {"serving", "platform", "faas"},
+}
+
+_SRC = "src/repro/"
+
+
+def _module_of(path: str) -> str:
+    """'src/repro/faas/workloads.py' -> 'repro.faas.workloads' (keeping the
+    __init__ segment so the containing package is uniformly parts[:-1])."""
+    return path[len("src/"):-len(".py")].replace("/", ".")
+
+
+def _resolve(module: str, level: int, name: str) -> str:
+    """Absolute dotted target of an import found in ``module``."""
+    if level == 0:
+        return name
+    pkg = module.split(".")[:-1]
+    if level > 1 and len(pkg) < level - 1:
+        return name
+    base = pkg if level == 1 else pkg[:len(pkg) - (level - 1)]
+    return ".".join(base + [name]) if name else ".".join(base)
+
+
+class _Imp:
+    __slots__ = ("lineno", "level", "module", "names", "module_level")
+
+    def __init__(self, lineno, level, module, names, module_level):
+        self.lineno = lineno
+        self.level = level
+        self.module = module          # '' for "from . import x"
+        self.names = names            # [] for plain "import a.b"
+        self.module_level = module_level
+
+
+def _imports(tree: ast.Module) -> List[_Imp]:
+    """Every import in the file, TYPE_CHECKING blocks excluded, annotated
+    with whether it executes at module import time."""
+    out: List[_Imp] = []
+
+    def visit(body, module_level: bool) -> None:
+        for node in body:
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    out.append(_Imp(node.lineno, 0, a.name, [],
+                                    module_level))
+            elif isinstance(node, ast.ImportFrom):
+                out.append(_Imp(node.lineno, node.level, node.module or "",
+                                [a.name for a in node.names], module_level))
+            elif isinstance(node, ast.If):
+                if not is_type_checking(node.test):
+                    visit(node.body, module_level)
+                visit(node.orelse, module_level)
+            elif isinstance(node, ast.Try):
+                for blk in (node.body, node.orelse, node.finalbody):
+                    visit(blk, module_level)
+                for h in node.handlers:
+                    visit(h.body, module_level)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                visit(node.body, False)
+            elif isinstance(node, ast.ClassDef):
+                visit(node.body, False)
+            elif isinstance(node, (ast.For, ast.While, ast.With)):
+                visit(node.body, module_level)
+
+    visit(tree.body, True)
+    return out
+
+
+def _exports(init_unit) -> Set[str]:
+    """Public names a package's __init__ provides: explicit ``__all__``
+    strings plus public module-level bindings (imports, defs, assigns)."""
+    out: Set[str] = set()
+    for node in init_unit.tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    if t.id == "__all__" and isinstance(
+                            node.value, (ast.List, ast.Tuple)):
+                        out.update(e.value for e in node.value.elts
+                                   if isinstance(e, ast.Constant)
+                                   and isinstance(e.value, str))
+                    elif not t.id.startswith("_"):
+                        out.add(t.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            if not node.name.startswith("_"):
+                out.add(node.name)
+        elif isinstance(node, ast.ImportFrom):
+            out.update(a.asname or a.name for a in node.names
+                       if not (a.asname or a.name).startswith("_"))
+    return out
+
+
+class LayeringPass(Pass):
+    name = "layering"
+    rules = {
+        "RPL511": "import violates the repro package layering",
+        "RPL512": "module-level import cycle between repro packages",
+        "RPL513": "cross-package import bypasses the target __init__ API",
+    }
+
+    def run_project(self, ctx) -> Iterable[Finding]:
+        units = [u for u in ctx.units if u.path.startswith(_SRC)]
+        packages = self._packages(units)
+        edges: Dict[str, Set[str]] = {}
+        edge_site: Dict[Tuple[str, str], Tuple[str, int]] = {}
+        findings: List[Finding] = []
+        for unit in units:
+            mod = _module_of(unit.path)
+            pkg = mod.split(".")[1] if mod.count(".") else ""
+            for imp in _imports(unit.tree):
+                for tgt_mod, name in self._targets(mod, imp):
+                    parts = tgt_mod.split(".")
+                    if parts[0] != "repro" or len(parts) < 2:
+                        continue
+                    tgt = parts[1]
+                    if not pkg or tgt == pkg:
+                        continue
+                    if imp.module_level:
+                        edges.setdefault(pkg, set()).add(tgt)
+                        edge_site.setdefault((pkg, tgt),
+                                             (unit.path, imp.lineno))
+                        if tgt in LAYERING.get(pkg, ()):
+                            findings.append(Finding(
+                                "RPL511", unit.path, imp.lineno,
+                                f"repro.{pkg} must not import repro.{tgt} "
+                                f"(layering: see tools/analyze/passes/"
+                                f"layering.py)"))
+                    if name is not None:
+                        f = self._api_check(unit, imp, tgt, tgt_mod, name,
+                                            packages)
+                        if f:
+                            findings.append(f)
+        self.edges = edges            # exposed for the tools/lint_imports shim
+        cycle = self._find_cycle(edges)
+        if cycle:
+            site = edge_site.get((cycle[0], cycle[1]), (units[0].path, 1))
+            findings.append(Finding(
+                "RPL512", site[0], site[1],
+                "import cycle between repro packages: "
+                + " -> ".join(cycle)))
+        return findings
+
+    # --- structure --------------------------------------------------------------
+    @staticmethod
+    def _packages(units) -> Dict[str, Tuple[Set[str], Optional[Set[str]]]]:
+        """pkg -> (submodule names, exports or None when no __init__)."""
+        out: Dict[str, Tuple[Set[str], Optional[Set[str]]]] = {}
+        for u in units:
+            parts = u.path[len(_SRC):].split("/")
+            if len(parts) < 2:
+                continue
+            pkg = parts[0]
+            subs, exports = out.setdefault(pkg, (set(), None))
+            name = parts[1]
+            if name.endswith(".py"):
+                name = name[:-3]
+            if name != "__init__":
+                subs.add(name)
+            if parts[1:] == ["__init__.py"]:
+                out[pkg] = (subs, _exports(u))
+        return out
+
+    @staticmethod
+    def _targets(mod: str, imp: _Imp):
+        """(absolute target module, imported name or None) pairs."""
+        if not imp.names:                       # plain "import a.b"
+            yield _resolve(mod, imp.level, imp.module), None
+        elif imp.module:                        # "from a.b import x, y"
+            base = _resolve(mod, imp.level, imp.module)
+            for n in imp.names:
+                yield base, n
+        else:                                   # "from . import x"
+            for n in imp.names:
+                yield _resolve(mod, imp.level, n), None
+
+    def _api_check(self, unit, imp, tgt_pkg: str, tgt_mod: str, name: str,
+                   packages) -> Optional[Finding]:
+        subs, exports = packages.get(tgt_pkg, (set(), None))
+        deep = tgt_mod != f"repro.{tgt_pkg}"
+        if name.startswith("_"):
+            return Finding(
+                "RPL513", unit.path, imp.lineno,
+                f"'{name}' is private to {tgt_mod}; export a public name "
+                f"from repro.{tgt_pkg} instead")
+        if not deep and name in subs:
+            return None                     # explicit submodule access is fine
+        if exports is not None and name in exports:
+            return None
+        hint = ("has no __init__ exports" if exports is None
+                else "does not export it")
+        return Finding(
+            "RPL513", unit.path, imp.lineno,
+            f"'{name}' imported from {tgt_mod} but "
+            f"repro.{tgt_pkg}.__init__ {hint}; cross-package imports must "
+            f"resolve through the target package's public API")
+
+    @staticmethod
+    def _find_cycle(edges: Dict[str, Set[str]]) -> List[str]:
+        state: Dict[str, int] = {}   # 0 visiting, 1 done
+        stack: List[str] = []
+
+        def dfs(n: str) -> List[str]:
+            state[n] = 0
+            stack.append(n)
+            for m in sorted(edges.get(n, ())):
+                if state.get(m) == 0:
+                    return stack[stack.index(m):] + [m]
+                if m not in state:
+                    cyc = dfs(m)
+                    if cyc:
+                        return cyc
+            state[n] = 1
+            stack.pop()
+            return []
+
+        for n in sorted(edges):
+            if n not in state:
+                cyc = dfs(n)
+                if cyc:
+                    return cyc
+        return []

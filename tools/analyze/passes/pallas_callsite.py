@@ -1,0 +1,228 @@
+"""Pallas call-site consistency pass.
+
+A ``pl.pallas_call`` site wires three things that must agree but are only
+checked at trace time (and in interpret mode some mismatches silently
+broadcast instead of failing): the grid, each BlockSpec's ``index_map``
+arity, and the kernel function's positional signature. This pass checks
+them statically at each call site:
+
+* RPL401 — every ``index_map`` lambda must take ``len(grid)`` arguments
+  (plus ``num_scalar_prefetch`` leading refs when the site uses a
+  ``PrefetchScalarGridSpec``). Trailing lambda *defaults* (the
+  ``lambda i, j, g=group:`` closure idiom) are not grid arguments.
+* RPL402 — the kernel's positional parameters must count exactly
+  ``num_scalar_prefetch + len(in_specs) + n_outputs + len(scratch_shapes)``,
+  and ``out_specs`` / ``out_shape`` must agree on ``n_outputs``.
+* RPL403 — keywords bound via ``functools.partial(kernel, ...)`` must name
+  actual parameters of the kernel def.
+
+Resolution is best-effort: grid/specs named by simple local assignments in
+the enclosing function are followed; anything unresolvable is skipped
+silently rather than guessed at. ``checked_sites`` records how many call
+sites were fully checked so the self-test can pin coverage of the five
+kernels in ``src/repro/kernels/``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from analyze.core import Finding, Pass, call_name
+
+_MAX_RESOLVE_DEPTH = 8
+
+
+def _enclosing_env(tree: ast.Module, call: ast.Call) -> Dict[str, ast.expr]:
+    """name -> value for simple assignments in the function containing
+    ``call`` (module level included as a fallback)."""
+    env: Dict[str, ast.expr] = {}
+
+    def harvest(body) -> None:
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                        and isinstance(node.targets[0], ast.Name):
+                    env[node.targets[0].id] = node.value
+
+    harvest(tree.body)
+    for fn in ast.walk(tree):
+        if isinstance(fn, ast.FunctionDef) and any(
+                n is call for n in ast.walk(fn)):
+            harvest(fn.body)
+    return env
+
+
+def _resolve(expr: Optional[ast.expr],
+             env: Dict[str, ast.expr]) -> Optional[ast.expr]:
+    for _ in range(_MAX_RESOLVE_DEPTH):
+        if isinstance(expr, ast.Name) and expr.id in env:
+            expr = env[expr.id]
+        else:
+            return expr
+    return expr
+
+
+def _const_int(expr: Optional[ast.expr]) -> Optional[int]:
+    if isinstance(expr, ast.Constant) and isinstance(expr.value, int):
+        return expr.value
+    return None
+
+
+def _seq_len(expr: Optional[ast.expr]) -> Optional[int]:
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        return len(expr.elts)
+    return None
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+class _Site:
+    """Everything resolvable about one pallas_call site."""
+
+    def __init__(self, call: ast.Call, env: Dict[str, ast.expr]):
+        self.call = call
+        self.num_prefetch = 0
+        grid_src = call
+        spec = _resolve(_kw(call, "grid_spec"), env)
+        if isinstance(spec, ast.Call) and (call_name(spec) or "").endswith(
+                "PrefetchScalarGridSpec"):
+            grid_src = spec
+            self.num_prefetch = _const_int(
+                _resolve(_kw(spec, "num_scalar_prefetch"), env)) or 0
+        self.grid_len = _seq_len(_resolve(_kw(grid_src, "grid"), env))
+        self.in_specs = self._spec_list(_kw(grid_src, "in_specs"), env)
+        out_specs = _resolve(_kw(grid_src, "out_specs"), env)
+        self.out_specs = self._spec_list(_kw(grid_src, "out_specs"), env)
+        self.n_out_specs = (len(self.out_specs) if self.out_specs is not None
+                            else (1 if self._is_blockspec(out_specs)
+                                  else None))
+        if self.out_specs is None and self._is_blockspec(out_specs):
+            self.out_specs = [out_specs]
+        out_shape = _resolve(_kw(call, "out_shape"), env)
+        self.n_out_shape = _seq_len(out_shape)
+        if self.n_out_shape is None and isinstance(out_shape, ast.Call):
+            self.n_out_shape = 1
+        scratch = _resolve(_kw(call, "scratch_shapes")
+                           or _kw(grid_src, "scratch_shapes"), env)
+        self.n_scratch = _seq_len(scratch) if scratch is not None else 0
+
+    @staticmethod
+    def _is_blockspec(expr) -> bool:
+        return isinstance(expr, ast.Call) and (
+            call_name(expr) or "").endswith("BlockSpec")
+
+    @staticmethod
+    def _spec_list(expr, env) -> Optional[List[ast.expr]]:
+        expr = _resolve(expr, env)
+        if isinstance(expr, (ast.Tuple, ast.List)):
+            return [_resolve(e, env) for e in expr.elts]
+        return None
+
+
+class PallasCallsitePass(Pass):
+    name = "pallas-callsite"
+    rules = {
+        "RPL401": "index_map arity != grid length (+ scalar prefetch)",
+        "RPL402": "kernel signature / spec count mismatch at pallas_call",
+        "RPL403": "partial-bound kwarg missing from the kernel signature",
+    }
+
+    def __init__(self):
+        self.checked_sites = 0
+
+    def run(self, unit, ctx) -> Iterable[Finding]:
+        if not unit.path.startswith("src/repro/"):
+            return
+        defs = {n.name: n for n in ast.walk(unit.tree)
+                if isinstance(n, ast.FunctionDef)}
+        for call in ast.walk(unit.tree):
+            if not (isinstance(call, ast.Call)
+                    and (call_name(call) or "").endswith("pallas_call")
+                    and call.args):
+                continue
+            env = _enclosing_env(unit.tree, call)
+            site = _Site(call, env)
+            kernel, bound = self._kernel_ref(call.args[0], env)
+            kern_def = defs.get(kernel) if kernel else None
+            self.checked_sites += 1
+            yield from self._check_index_maps(unit, site)
+            yield from self._check_signature(unit, site, kern_def)
+            if kern_def is not None and bound:
+                yield from self._check_partial_kwargs(unit, call, kern_def,
+                                                      bound)
+
+    @staticmethod
+    def _kernel_ref(expr, env) -> Tuple[Optional[str], List[str]]:
+        """(kernel def name, partial-bound kwarg names) for arg 0."""
+        bound: List[str] = []
+        if isinstance(expr, ast.Call) and (call_name(expr) or "").endswith(
+                "partial") and expr.args:
+            bound = [kw.arg for kw in expr.keywords if kw.arg]
+            expr = expr.args[0]
+        expr = _resolve(expr, env)
+        return (expr.id if isinstance(expr, ast.Name) else None), bound
+
+    def _check_index_maps(self, unit, site: _Site) -> Iterable[Finding]:
+        if site.grid_len is None:
+            return
+        expected = site.grid_len + site.num_prefetch
+        for spec in (site.in_specs or []) + (site.out_specs or []):
+            if not site._is_blockspec(spec):
+                continue
+            lam = _kw(spec, "index_map")
+            if lam is None and len(spec.args) >= 2:
+                lam = spec.args[1]
+            if not isinstance(lam, ast.Lambda):
+                continue
+            required = len(lam.args.args) - len(lam.args.defaults)
+            if required != expected:
+                yield Finding(
+                    "RPL401", unit.path, lam.lineno,
+                    f"index_map takes {required} grid argument(s) but the "
+                    f"grid is rank {site.grid_len}"
+                    + (f" + {site.num_prefetch} scalar-prefetch ref(s)"
+                       if site.num_prefetch else "")
+                    + f" = {expected} expected")
+
+    def _check_signature(self, unit, site: _Site,
+                         kern_def) -> Iterable[Finding]:
+        if (site.n_out_specs is not None and site.n_out_shape is not None
+                and site.n_out_specs != site.n_out_shape):
+            yield Finding(
+                "RPL402", unit.path, site.call.lineno,
+                f"out_specs lists {site.n_out_specs} output(s) but "
+                f"out_shape lists {site.n_out_shape}")
+        if kern_def is None or site.in_specs is None:
+            return
+        n_out = site.n_out_specs if site.n_out_specs is not None \
+            else site.n_out_shape
+        if n_out is None or site.n_scratch is None:
+            return
+        expected = (site.num_prefetch + len(site.in_specs) + n_out
+                    + site.n_scratch)
+        a = kern_def.args
+        got = len(a.posonlyargs) + len(a.args)
+        if got != expected:
+            yield Finding(
+                "RPL402", unit.path, site.call.lineno,
+                f"kernel '{kern_def.name}' takes {got} positional ref(s) "
+                f"but the call site provides {expected} "
+                f"({site.num_prefetch} prefetch + {len(site.in_specs)} in + "
+                f"{n_out} out + {site.n_scratch} scratch)")
+
+    @staticmethod
+    def _check_partial_kwargs(unit, call, kern_def,
+                              bound: List[str]) -> Iterable[Finding]:
+        a = kern_def.args
+        names = {x.arg for x in a.posonlyargs + a.args + a.kwonlyargs}
+        for kwname in bound:
+            if kwname not in names:
+                yield Finding(
+                    "RPL403", unit.path, call.lineno,
+                    f"functools.partial binds '{kwname}' but kernel "
+                    f"'{kern_def.name}' has no such parameter")

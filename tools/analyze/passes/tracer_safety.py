@@ -1,0 +1,231 @@
+"""Tracer/benchmark safety pass.
+
+Inside ``jax.jit``-reachable code (RPL301–303), host-side operations either
+crash at trace time or silently freeze a traced value into the compiled
+artifact; in benchmarks (RPL304), timing async-dispatched device work
+without a sync under-counts, which inflated tok/s numbers before PR 5's
+benches synced explicitly.
+
+A function is considered jit-reachable when, in the same module, it is
+decorated with ``jax.jit`` / ``functools.partial(jax.jit, ...)``, passed to
+``jax.jit(...)`` (directly or through ``functools.partial``), or used as a
+Pallas kernel body (first argument of ``pl.pallas_call``). Cross-module
+reachability is out of scope on purpose: it would need whole-program call
+graphs and the kernels/engines this repo cares about are module-local.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from analyze.core import Finding, Pass, call_name, dotted, walk_skipping_defs
+
+_WALLCLOCK = {"time.perf_counter", "time.time", "time.monotonic",
+              "time.process_time", "perf_counter", "monotonic"}
+# method names whose call dispatches device work in this repo's benches
+_DEVICE_WORK = {"generate", "serve", "step", "run_batch", "decode_step",
+                "prefill", "migrate_to", "shrink", "grow", "resize"}
+
+
+def _jit_target(call: ast.Call) -> Optional[Tuple[str, Tuple[str, ...]]]:
+    """If ``call`` is jax.jit(fn_or_partial, ...), return (fn_name,
+    static_argnames); else None."""
+    name = call_name(call)
+    if name not in ("jax.jit", "jit"):
+        return None
+    if not call.args:
+        return None
+    statics = _static_argnames(call.keywords)
+    inner = call.args[0]
+    if isinstance(inner, ast.Name):
+        return inner.id, statics
+    if isinstance(inner, ast.Call) and (call_name(inner) or "").endswith(
+            "partial") and inner.args and isinstance(inner.args[0], ast.Name):
+        return inner.args[0].id, statics
+    return None
+
+
+def _static_argnames(keywords) -> Tuple[str, ...]:
+    for kw in keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return tuple(e.value for e in v.elts
+                             if isinstance(e, ast.Constant))
+    return ()
+
+
+def _decorated_static(fn) -> Optional[Tuple[str, ...]]:
+    """static_argnames if ``fn`` carries a jit decorator, else None."""
+    for dec in fn.decorator_list:
+        if isinstance(dec, (ast.Name, ast.Attribute)):
+            if dotted(dec) in ("jit", "jax.jit"):
+                return ()
+        elif isinstance(dec, ast.Call):
+            name = call_name(dec)
+            if name in ("jax.jit", "jit"):
+                return _static_argnames(dec.keywords)
+            if (name or "").endswith("partial") and dec.args:
+                head = dec.args[0]
+                if isinstance(head, (ast.Name, ast.Attribute)) and dotted(
+                        head) in ("jax.jit", "jit"):
+                    return _static_argnames(dec.keywords)
+    return None
+
+
+def jit_reachable(tree: ast.Module) -> Dict[str, Tuple[ast.FunctionDef,
+                                                       Tuple[str, ...]]]:
+    """name -> (def, static_argnames) for module-local jit/pallas bodies."""
+    defs = {n.name: n for n in ast.walk(tree)
+            if isinstance(n, ast.FunctionDef)}
+    out: Dict[str, Tuple[ast.FunctionDef, Tuple[str, ...]]] = {}
+    for name, fn in defs.items():
+        statics = _decorated_static(fn)
+        if statics is not None:
+            out[name] = (fn, statics)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        tgt = _jit_target(node)
+        if tgt and tgt[0] in defs and tgt[0] not in out:
+            out[tgt[0]] = (defs[tgt[0]], tgt[1])
+        if (call_name(node) or "").endswith("pallas_call") and node.args:
+            kern = node.args[0]
+            if isinstance(kern, ast.Call) and (call_name(kern)
+                                               or "").endswith("partial"):
+                kern = kern.args[0] if kern.args else None
+            if isinstance(kern, ast.Name) and kern.id in defs:
+                # a Pallas kernel's keyword-only params are partial-bound
+                # Python values (refs arrive positionally) — they are static
+                kw_static = tuple(a.arg
+                                  for a in defs[kern.id].args.kwonlyargs)
+                out.setdefault(kern.id, (defs[kern.id], kw_static))
+    return out
+
+
+class TracerSafetyPass(Pass):
+    name = "tracer-safety"
+    rules = {
+        "RPL301": "wall-clock call inside a jit-reachable function",
+        "RPL302": "host conversion (float/int/bool/.item) on traced values",
+        "RPL303": "Python branch on a non-static jit parameter",
+        "RPL304": "perf_counter delta over device work without "
+                  "block_until_ready",
+    }
+
+    def run(self, unit, ctx) -> Iterable[Finding]:
+        if unit.path.startswith("src/repro/"):
+            for name, (fn, statics) in sorted(jit_reachable(
+                    unit.tree).items()):
+                yield from self._check_jit_body(unit, fn, statics)
+        if unit.path.startswith("benchmarks/"):
+            for fn in ast.walk(unit.tree):
+                if isinstance(fn, ast.FunctionDef):
+                    yield from self._check_bench_timing(unit, fn)
+
+    # --- RPL301-303 -------------------------------------------------------------
+    def _check_jit_body(self, unit, fn, statics) -> Iterable[Finding]:
+        params = {a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                  + fn.args.kwonlyargs)}
+        traced = params - set(statics)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                name = call_name(node)
+                if name in _WALLCLOCK:
+                    yield Finding(
+                        "RPL301", unit.path, node.lineno,
+                        f"{name}() inside jit-reachable '{fn.name}' runs at "
+                        f"trace time, not per call — time outside jit")
+                elif (name in ("float", "int", "bool") and node.args
+                      and not all(isinstance(a, ast.Constant)
+                                  for a in node.args)):
+                    yield Finding(
+                        "RPL302", unit.path, node.lineno,
+                        f"{name}(...) inside jit-reachable '{fn.name}' "
+                        f"forces a host sync / concretization error on "
+                        f"traced values")
+                elif (isinstance(node.func, ast.Attribute)
+                      and node.func.attr == "item" and not node.args):
+                    yield Finding(
+                        "RPL302", unit.path, node.lineno,
+                        f".item() inside jit-reachable '{fn.name}' forces a "
+                        f"host sync on traced values")
+            elif isinstance(node, (ast.If, ast.While)):
+                bad = self._branch_on_traced(node.test, traced)
+                if bad:
+                    yield Finding(
+                        "RPL303", unit.path, node.lineno,
+                        f"branch on parameter '{bad}' of jit-reachable "
+                        f"'{fn.name}'; it traces as an array — mark it "
+                        f"static_argnames or use lax.cond/jnp.where")
+
+    @staticmethod
+    def _branch_on_traced(test: ast.expr, traced: Set[str]) -> Optional[str]:
+        """Name of a traced param the test branches on, ignoring ``is None``
+        structure checks (valid under jit)."""
+        if isinstance(test, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops):
+            return None
+        if isinstance(test, ast.Name) and test.id in traced:
+            return test.id
+        if isinstance(test, (ast.BoolOp,)):
+            for v in test.values:
+                bad = TracerSafetyPass._branch_on_traced(v, traced)
+                if bad:
+                    return bad
+            return None
+        if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            return TracerSafetyPass._branch_on_traced(test.operand, traced)
+        if isinstance(test, ast.Compare):
+            for sub in [test.left] + test.comparators:
+                if isinstance(sub, ast.Name) and sub.id in traced:
+                    return sub.id
+        return None
+
+    # --- RPL304 -----------------------------------------------------------------
+    def _check_bench_timing(self, unit, fn) -> Iterable[Finding]:
+        starts: Dict[str, List[int]] = {}
+        deltas: List[Tuple[int, str]] = []
+        calls: List[Tuple[int, str, bool]] = []   # (line, name, is_block)
+        for node in walk_skipping_defs(fn):
+            if isinstance(node, ast.Assign) and isinstance(
+                    node.value, ast.Call) and call_name(
+                        node.value) in _WALLCLOCK:
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        starts.setdefault(t.id, []).append(node.lineno)
+            elif isinstance(node, ast.BinOp) and isinstance(node.op, ast.Sub):
+                if (isinstance(node.left, ast.Call)
+                        and call_name(node.left) in _WALLCLOCK
+                        and isinstance(node.right, ast.Name)):
+                    deltas.append((node.lineno, node.right.id))
+            if isinstance(node, ast.Call):
+                name = call_name(node) or ""
+                if name.split(".")[-1] == "block_until_ready":
+                    calls.append((node.lineno, name, True))
+                elif (isinstance(node.func, ast.Attribute)
+                      and node.func.attr in _DEVICE_WORK):
+                    calls.append((node.lineno, name or node.func.attr, False))
+                elif name.startswith(("jax.", "jnp.")):
+                    calls.append((node.lineno, name, False))
+        for delta_line, var in deltas:
+            opened = [l for l in starts.get(var, ()) if l < delta_line]
+            if not opened:
+                continue
+            start = max(opened)
+            work = [(l, n) for l, n, blk in calls
+                    if not blk and start < l <= delta_line]
+            if not work:
+                continue
+            last_work = max(l for l, _ in work)
+            synced = any(blk and last_work <= l <= delta_line
+                         for l, _, blk in calls)
+            if not synced:
+                names = ", ".join(sorted({n for _, n in work}))
+                yield Finding(
+                    "RPL304", unit.path, delta_line,
+                    f"perf_counter delta over async device work ({names}) "
+                    f"without jax.block_until_ready — the measured wall "
+                    f"time under-counts dispatch still in flight")

@@ -1,163 +1,66 @@
 #!/usr/bin/env python
-"""Import-layering lint for the harvest stack.
+"""Import-layering lint for the harvest stack — thin shim over reprolint.
 
-Enforces the package layering that makes the seams composable:
+The actual analysis lives in ``tools/analyze/passes/layering.py``
+(:class:`LayeringPass`); this entry point keeps the historical CLI and exit
+semantics for callers that invoke ``python tools/lint_imports.py`` directly
+(CI used to; tests still do). It runs ONLY the layering rules that this
+script always enforced:
 
-    repro.core  (paper mechanisms)      imports no policy or model layer
-    repro.faas  (multi-tenant policies) may import repro.core
-    repro.distributed (JAX substrate)   imports no sim/policy/composition
-                                        layer (it must stay usable without a
-                                        simulator — see elastic_serving)
-    repro.kernels (Pallas leaf compute) imports no serving/platform/faas
-                                        layer (models dispatch into kernels
-                                        via kernel_impls, never the reverse)
-    repro.platform (composition)        may import all of them
+* RPL511 — module-level import that violates the package layering
+* RPL512 — any module-level import cycle between top-level ``repro.*``
+  packages
 
-Violations of that order — and *any* import cycle between top-level
-``repro.*`` packages — fail the build. Only module-level imports count
-(``if TYPE_CHECKING:`` blocks and function-local imports are free: they
-cannot create an import-time cycle).
+The newer public-API rule (RPL513) is reported by ``python tools/analyze``
+only — it must not change this shim's exit status.
 
 Usage: python tools/lint_imports.py [src_dir]   (exit 0 = clean)
 """
 from __future__ import annotations
 
-import ast
 import os
 import sys
-from typing import Dict, Iterable, List, Set, Tuple
 
-# importer -> packages it must never import at module level
-LAYERING = {
-    "core": {"faas", "platform", "distributed"},
-    "faas": {"platform"},
-    "distributed": {"core", "faas", "platform"},
-    # kernels are leaf compute: models/serving dispatch INTO them via the
-    # kernel_impls policy, never the other way around
-    "kernels": {"serving", "platform", "faas"},
-}
+_TOOLS = os.path.dirname(os.path.abspath(__file__))
+if _TOOLS not in sys.path:
+    sys.path.insert(0, _TOOLS)
 
-
-def _is_type_checking(test: ast.expr) -> bool:
-    return ((isinstance(test, ast.Name) and test.id == "TYPE_CHECKING")
-            or (isinstance(test, ast.Attribute)
-                and test.attr == "TYPE_CHECKING"))
+from analyze.core import FileUnit, RepoContext          # noqa: E402
+from analyze.passes.layering import (                   # noqa: E402,F401
+    LAYERING,   # re-exported: pre-shim callers imported the table from here
+    LayeringPass,
+)
 
 
-def _module_level_imports(body: Iterable[ast.stmt]) -> Set[Tuple[int, str]]:
-    """``(relative_level, dotted_name)`` pairs imported at module level
-    (level 0 = absolute), following into top-level If/Try blocks but not
-    into TYPE_CHECKING guards or defs."""
-    out: Set[Tuple[int, str]] = set()
-    for node in body:
-        if isinstance(node, ast.Import):
-            out.update((0, a.name) for a in node.names)
-        elif isinstance(node, ast.ImportFrom):
-            if node.module:
-                out.add((node.level, node.module))
-            else:   # "from . import x" / "from .. import y"
-                out.update((node.level, a.name) for a in node.names)
-        elif isinstance(node, ast.If):
-            if not _is_type_checking(node.test):
-                out |= _module_level_imports(node.body)
-            out |= _module_level_imports(node.orelse)
-        elif isinstance(node, ast.Try):
-            for blk in (node.body, node.orelse, node.finalbody):
-                out |= _module_level_imports(blk)
-            for h in node.handlers:
-                out |= _module_level_imports(h.body)
-    return out
-
-
-def _resolve(module: str, level: int, name: str) -> str:
-    """Absolute dotted target of an import found in ``module`` (dotted path,
-    ``__init__`` suffix stripped by the caller)."""
-    if level == 0:
-        return name
-    pkg = module.split(".")[:-1]        # containing package of the module
-    base = pkg if level == 1 else pkg[:len(pkg) - (level - 1)]
-    if level > 1 and len(pkg) < level - 1:
-        return name                     # beyond the tree root; leave as-is
-    return ".".join(base + [name]) if name else ".".join(base)
-
-
-def package_edges(src: str) -> Tuple[Dict[str, Set[str]], List[str]]:
-    """(pkg -> imported pkgs) over top-level packages under src/repro, plus
-    the per-module edge provenance for error messages."""
+def _units(src: str):
+    """Parse src/repro into FileUnits whose paths look repo-relative
+    ('src/repro/...') — the prefix LayeringPass scopes itself to —
+    regardless of where ``src`` actually lives."""
+    out = []
     root = os.path.join(src, "repro")
-    edges: Dict[str, Set[str]] = {}
-    provenance: List[str] = []
-    for dirpath, _, files in os.walk(root):
-        for fname in files:
+    for dirpath, dirnames, files in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+        for fname in sorted(files):
             if not fname.endswith(".py"):
                 continue
             path = os.path.join(dirpath, fname)
-            # keep the "__init__" segment: a package's containing package for
-            # relative-import resolution is then uniformly parts[:-1]
-            rel = os.path.relpath(path, src)[:-3].replace(os.sep, ".")
-            parts = rel.split(".")
-            pkg = parts[1] if len(parts) > 1 else ""
+            rel = "src/" + os.path.relpath(path, src).replace(os.sep, "/")
             with open(path) as f:
-                tree = ast.parse(f.read(), filename=path)
-            for level, name in _module_level_imports(tree.body):
-                mod = _resolve(rel, level, name)
-                mparts = mod.split(".")
-                if mparts[0] != "repro" or len(mparts) < 2:
-                    continue
-                tgt = mparts[1]
-                if tgt and pkg and tgt != pkg:
-                    edges.setdefault(pkg, set()).add(tgt)
-                    provenance.append(f"{rel} -> {mod}")
-    return edges, provenance
-
-
-def find_cycle(edges: Dict[str, Set[str]]) -> List[str]:
-    state: Dict[str, int] = {}   # 0 visiting, 1 done
-    stack: List[str] = []
-
-    def dfs(n: str) -> List[str]:
-        state[n] = 0
-        stack.append(n)
-        for m in sorted(edges.get(n, ())):
-            if state.get(m) == 0:
-                return stack[stack.index(m):] + [m]
-            if m not in state:
-                cyc = dfs(m)
-                if cyc:
-                    return cyc
-        state[n] = 1
-        stack.pop()
-        return []
-
-    for n in sorted(edges):
-        if n not in state:
-            cyc = dfs(n)
-            if cyc:
-                return cyc
-    return []
+                out.append(FileUnit(rel, f.read()))
+    return out
 
 
 def main() -> int:
     src = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
-        os.path.dirname(os.path.abspath(__file__)), "..", "src")
-    edges, provenance = package_edges(src)
-    failures = []
-    for importer, forbidden in LAYERING.items():
-        bad = edges.get(importer, set()) & forbidden
-        for tgt in sorted(bad):
-            detail = [p for p in provenance
-                      if p.startswith(f"repro.{importer}")
-                      and f"-> repro.{tgt}" in p]
-            failures.append(f"layering violation: repro.{importer} must not "
-                            f"import repro.{tgt} ({'; '.join(detail)})")
-    cycle = find_cycle(edges)
-    if cycle:
-        failures.append("import cycle between repro packages: "
-                        + " -> ".join(cycle))
-    if failures:
-        print("\n".join(failures), file=sys.stderr)
+        _TOOLS, "..", "src")
+    lint = LayeringPass()
+    findings = [f for f in lint.run_project(RepoContext(_units(src)))
+                if f.rule in ("RPL511", "RPL512")]
+    if findings:
+        print("\n".join(f.render() for f in findings), file=sys.stderr)
         return 1
-    print(f"import layering OK ({sum(len(v) for v in edges.values())} "
+    print(f"import layering OK "
+          f"({sum(len(v) for v in lint.edges.values())} "
           f"cross-package edges, no cycles)")
     return 0
 
