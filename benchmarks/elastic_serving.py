@@ -69,10 +69,10 @@ def run_elastic_cell(cell: str, model_bytes: float, duration: float,
         "n_lost": oc.get("lost", 0),
         "n_timeout": oc.get("timeout", 0),
         "n_503": oc.get("503", 0),
-        "n_migrations": m.total("gang_migrations"),
-        "n_replica_losses": m.total("gang_replica_losses"),
-        "migrated_gb": m.total("gang_migrated_bytes") / 1e9,
-        "wire_gb": m.total("gang_wire_bytes") / 1e9,
+        "n_migrations": m.total("gang_migrations_total"),
+        "n_replica_losses": m.total("gang_replica_losses_total"),
+        "migrated_gb": m.total("gang_migrated_bytes_total") / 1e9,
+        "wire_gb": m.total("gang_wire_bytes_total") / 1e9,
         "p50_s": nan_to_none(res.response_p50),
         "p95_s": nan_to_none(res.response_p95),
     }

@@ -33,6 +33,7 @@ import bisect
 import collections
 import dataclasses
 import itertools
+import math
 from typing import Callable, Deque, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -75,6 +76,13 @@ class SlurmSim:
         self.sim = sim
         self.controller = controller
         self.rng = rng
+        # Event-time draws must not consume the shared stream: which event
+        # pops first at a tied timestamp would then decide who gets which
+        # draw, and tie_break="shuffle" would change the physics instead of
+        # just the tie order. Every event-time draw instead comes from a
+        # derived generator keyed to a stable identity (node, virtual time)
+        # — see _derived_rng. One draw here seeds the whole derived family.
+        self._draw_seed = int(rng.integers(2 ** 31))
         self.sched_interval = sched_interval
         self.grace = grace
         self.slot_s = slot_s
@@ -113,7 +121,9 @@ class SlurmSim:
         self.exit_log: List[Tuple[int, float, float]] = []  # (node, t_created, t_dead)
         # accounting
         self.idle_time_total = sum(w.length for w in windows)
-        self.pilot_time = 0.0
+        # per-invoker covered spans; summed exactly (fsum) so coverage does
+        # not depend on the order same-instant exits happened to book them
+        self._pilot_spans: List[float] = []
         self.n_started = 0
         self.n_evicted = 0
         # rolling view of recently *closed* windows — the demand-adaptive
@@ -137,7 +147,15 @@ class SlurmSim:
         self._ws_idx = 0
         if stream:
             self.sim.at_front(stream[0][0], self._feed_window_events_due)
+        # reprolint: disable=RPL601 -- pass-vs-replenish/tick order only permutes which 15s pass places a queued pilot; placements touch warming (unregistered) invokers, so nothing request-visible changes — aggregates fuzz-invariant (test_tie_order.py)
         self.sim.at(0.0, self._sched_pass)
+
+    def _derived_rng(self, tag: int, node: int) -> np.random.Generator:
+        """Generator keyed to (stream tag, node, current virtual ms): two
+        same-time events can swap order without reassigning draws, because
+        the key depends on WHO draws and WHEN — never on pop order."""
+        return np.random.default_rng(
+            (self._draw_seed, tag, node, int(round(self.sim.now * 1000))))
 
     def _feed_window_events_due(self):
         """Fire every window event due now, then arm one sentinel for the
@@ -171,6 +189,7 @@ class SlurmSim:
             inv = st.invoker
             self.n_evicted += 1
             inv.sigterm("evict")
+            # reprolint: disable=RPL601 -- fires grace seconds after a fractional trace time; the drain _exit is capped at the same instant and both paths converge on the guarded _exit (dead-state check), so tied order commutes — fuzz-invariant
             self.sim.after(self.grace, self._force_kill, inv)
         self.recent_window_lengths.append(w.length)
         st.window = None
@@ -210,7 +229,8 @@ class SlurmSim:
                 return False
             # refreshed estimates are near-term and conservative (the plan now
             # has a concrete next prime job): slack capped at 1.1
-            slack = float(np.exp(self.rng.uniform(np.log(0.6), np.log(1.1))))
+            slack_rng = self._derived_rng(1, node)
+            slack = float(np.exp(slack_rng.uniform(np.log(0.6), np.log(1.1))))
             st.pred_end = self.sim.now + actual_remaining * slack
             remaining_pred = st.pred_end - self.sim.now
             if remaining_pred < self.slot_s:
@@ -290,9 +310,13 @@ class SlurmSim:
             # down to the 2-minute slot grid
             duration = min(job.time_max_s, remaining_pred)
             duration = max(job.time_min_s, duration // self.slot_s * self.slot_s)
+        # per-invoker rng keyed to (node, spawn time): its warmup and drain
+        # draws are a function of the invoker's identity, never of how many
+        # draws other components made first (one invoker per node at a time,
+        # and an invoker lives > 0 s, so the key is unique)
         inv = self.invoker_factory(
             self.sim, self.controller, node=node,
-            sched_end=self.sim.now + duration, rng=self.rng,
+            sched_end=self.sim.now + duration, rng=self._derived_rng(0, node),
             executor=self.executor, on_exit=self._on_invoker_exit,
             grace=self.grace, **self.invoker_kwargs)
         st.invoker = inv
@@ -331,7 +355,7 @@ class SlurmSim:
         w = getattr(inv, "_slurm_window", None)
         w_end = w.end if w is not None else inv.sched_end
         end_counted = min(self.sim.now, w_end)
-        self.pilot_time += max(0.0, end_counted - inv._slurm_start)
+        self._pilot_spans.append(max(0.0, end_counted - inv._slurm_start))
         # backfill plans chain fixed-length jobs back-to-back on the node
         if self.chain_on_exit and st is not None and st.window is not None:
             self._try_place(node, st)
@@ -351,6 +375,7 @@ class SlurmSim:
             self._count_inc(job.length_s)
         if expedite and self.sim.now - self._last_expedite >= 1.0:
             self._last_expedite = self.sim.now
+            # reprolint: disable=RPL601 -- same-instant expedited pass vs the periodic one: both drain the same queue through the same bucket-head picks, so running in either order places the identical job set — fuzz-invariant
             self.sim.after(0.0, self._do_pass)
 
     def cancel_queued(self, jobs: Sequence[PilotJob]) -> int:
@@ -386,12 +411,20 @@ class SlurmSim:
             len(inv.warm_fns) for inv in self.live_invokers.values()
             if inv.n_executed or inv.n_wasted)
 
+    @property
+    def pilot_time(self) -> float:
+        """Booked pilot coverage seconds. ``fsum`` makes the total exact,
+        hence independent of exit-booking order (tie reshuffles permute the
+        span list; a naive running += would drift in the last ulp)."""
+        return math.fsum(self._pilot_spans)
+
     def coverage(self) -> float:
         """Share of idle surface covered by running pilot jobs (Slurm-level)."""
-        live = 0.0
-        for inv in self.live_invokers.values():
-            w = getattr(inv, "_slurm_window", None)
-            w_end = w.end if w is not None else self.sim.now
-            end_counted = min(self.sim.now, w_end)
-            live += max(0.0, end_counted - inv._slurm_start)
+        def _live_spans():
+            for inv in self.live_invokers.values():
+                w = getattr(inv, "_slurm_window", None)
+                w_end = w.end if w is not None else self.sim.now
+                end_counted = min(self.sim.now, w_end)
+                yield max(0.0, end_counted - inv._slurm_start)
+        live = math.fsum(_live_spans())
         return (self.pilot_time + live) / max(self.idle_time_total, 1e-9)

@@ -10,6 +10,7 @@ from __future__ import annotations
 import bisect
 import heapq
 import itertools
+import random
 from typing import Callable, List, Optional, Tuple
 
 
@@ -33,18 +34,47 @@ class Event:
 
 
 class Simulator:
-    def __init__(self):
+    """``tie_break`` decides how same-time, same-class events order:
+
+    * ``"fifo"`` (default, the published configuration): insertion order —
+      integer seqs, bit-for-bit the historical behaviour.
+    * ``"shuffle"``: a seeded permutation — each event draws its seq from
+      ``random.Random(tie_seed)``, so equal-time pops come out in random
+      order. The ``at_front`` class is preserved (front events still fire
+      before every normal event at the same time), and a monotone counter
+      tie-breaks the measure-zero draw collision, keeping the heap a total
+      order. The tie-order fuzz harness sweeps ``tie_seed`` to prove the
+      published aggregates don't depend on insertion accidents.
+    """
+
+    def __init__(self, tie_break: str = "fifo", tie_seed: int = 0):
+        if tie_break not in ("fifo", "shuffle"):
+            raise ValueError(f"unknown tie_break: {tie_break!r}")
         self.now: float = 0.0
+        self.tie_break = tie_break
         self._heap: List[Event] = []
         self._seq = itertools.count()
         self._front_seq = itertools.count(start=-1, step=-1)
+        self._tie_rng = (random.Random(tie_seed)
+                         if tie_break == "shuffle" else None)
+        self._tie_count = itertools.count()
         self.n_processed = 0      # lifetime count of executed events
         self._n_cancelled = 0     # cancelled events still sitting in the heap
+
+    def _next_seq(self, front: bool):
+        """Seq in the event's tie class. fifo: ints (front negative).
+        shuffle: ``(draw, k)`` tuples with normal draws in [0, 1) and front
+        draws in [-2, -1) — the classes stay disjoint and compare exactly
+        like the integer seqs do."""
+        if self._tie_rng is None:
+            return next(self._front_seq) if front else next(self._seq)
+        r = self._tie_rng.random()
+        return (r - 2.0 if front else r, next(self._tie_count))
 
     def at(self, time: float, fn: Callable, *args) -> Event:
         if time < self.now - 1e-9:
             raise ValueError(f"event in the past: {time} < {self.now}")
-        ev = Event(max(time, self.now), next(self._seq), fn, args)
+        ev = Event(max(time, self.now), self._next_seq(False), fn, args)
         heapq.heappush(self._heap, ev)
         return ev
 
@@ -55,7 +85,7 @@ class Simulator:
         time while keeping the tie order of scheduling them all upfront."""
         if time < self.now - 1e-9:
             raise ValueError(f"event in the past: {time} < {self.now}")
-        ev = Event(max(time, self.now), next(self._front_seq), fn, args)
+        ev = Event(max(time, self.now), self._next_seq(True), fn, args)
         heapq.heappush(self._heap, ev)
         return ev
 

@@ -41,6 +41,7 @@ class JobManager:
         if self._started:
             return
         self._started = True
+        # reprolint: disable=RPL601 -- replenish-vs-pass ties on the 15s grid only decide whether freshly queued pilots are visible to the same-instant pass or the next one; placements touch warming invokers only, nothing request-visible — fuzz-invariant
         self.sim.at(0.0, self._replenish)
 
     def _replenish(self):

@@ -76,6 +76,7 @@ class AdaptiveJobManager:
         if self._started:
             return
         self._started = True
+        # reprolint: disable=RPL601 -- same benignity as JobManager._replenish: control-loop ticks tied with passes shift pilot submissions by at most one pass over warming invokers, nothing request-visible — fuzz-invariant
         self.sim.at(self.sim.now, self._tick)
 
     # --- observation --------------------------------------------------------

@@ -32,6 +32,7 @@ budget left) and ``"timeout"`` (the client deadline passed first).
 """
 from __future__ import annotations
 
+import zlib
 from typing import Dict, Optional, Sequence, TYPE_CHECKING
 
 from repro.faas.metrics import MetricsRegistry
@@ -122,9 +123,19 @@ class RetryPolicy:
     def budget(self, req: "Request") -> int:
         return self.retry_budgets.get(req.slo_class, self.max_retries)
 
-    def _backoff(self, n_used: int) -> float:
-        return min(self.backoff_max,
+    def _backoff(self, req: "Request", n_used: int) -> float:
+        """Exponential backoff with mean-preserving +/-25% jitter, keyed to
+        the request's stable identity (arrival, fn, attempt) — NOT a shared
+        RNG stream and NOT ``hash()`` (string hashing is per-process).
+        Production retry layers jitter their timers to decorrelate retries;
+        here the jitter also keeps two requests that died in the same
+        preemption from re-firing at the exact same instant, where only
+        event tie order could decide who re-queues first."""
+        base = min(self.backoff_max,
                    self.backoff_base * self.backoff_factor ** n_used)
+        key = f"{req.arrival!r}:{req.fn}:{n_used}".encode()
+        u = zlib.crc32(key) / 2 ** 32
+        return base * (0.75 + 0.5 * u)
 
     # --- controller hooks ---------------------------------------------------
     def absorb(self, req: "Request", outcome: str) -> bool:
@@ -146,7 +157,7 @@ class RetryPolicy:
         if used >= self.budget(req):
             self._c("retry_exhausted_total", slo_class=req.slo_class).inc()
             return False
-        delay = self._backoff(used)
+        delay = self._backoff(req, used)
         if (self.sim.now + delay + req.exec_time
                 >= req.arrival + req.timeout):
             # even a lower-bound re-execution (no queueing, no cold start)
@@ -156,6 +167,7 @@ class RetryPolicy:
             return False
         self._retries_used[req.id] = used + 1
         self._c("retries_total", slo_class=req.slo_class).inc()
+        # reprolint: disable=RPL601 -- backoff carries identity-keyed jitter (see _backoff), so two retries never fire at the same instant; ties with completions hit complete()'s first-terminal-wins guard — fuzz-invariant
         self.sim.after(delay, self._retry, req)
         return True
 
@@ -177,7 +189,7 @@ class RetryPolicy:
         if used < self.budget(req):
             self._retries_used[req.id] = used + 1
             self._c("retries_total", slo_class=req.slo_class).inc()
-            self.sim.after(self._backoff(used), self._retry, req)
+            self.sim.after(self._backoff(req, used), self._retry, req)
             return
         self._c("retry_exhausted_total", slo_class=req.slo_class).inc()
         self.controller.complete(req, "lost")
@@ -197,6 +209,7 @@ class RetryPolicy:
         self._c("attempts_total", slo_class=req.slo_class).inc()
         if (self.hedge_delay is not None
                 and self._hedges_used.get(req.id, 0) < self.max_hedges):
+            # reprolint: disable=RPL601 -- hedge timers for different requests commute (per-request state, duplicate-drop guard on dispatch); a timer tied with its own attempt's terminal is settled by the outcome-is-None check — fuzz-invariant
             self.sim.after(self.hedge_delay, self._maybe_hedge, req, inv.id)
 
     def _maybe_hedge(self, req: "Request", armed_inv_id: int) -> None:

@@ -32,6 +32,8 @@ from __future__ import annotations
 import itertools
 from typing import List, Optional, TYPE_CHECKING
 
+import numpy as np
+
 from repro.core.invoker import Invoker
 from repro.platform.registry import register
 
@@ -126,8 +128,8 @@ class GangPool:
     One pool per platform; it is the ``invoker_factory`` (via
     :meth:`spawn_member`) handed to SlurmSim, so every placed pilot job
     becomes a member. Metrics: per-gang ``gang_mesh_size`` gauges plus
-    ``gang_migrations`` / ``gang_migrated_bytes`` / ``gang_wire_bytes``
-    counters (labelled shrink/grow) and ``gang_replica_losses`` for the
+    ``gang_migrations_total`` / ``gang_migrated_bytes_total`` / ``gang_wire_bytes_total``
+    counters (labelled shrink/grow) and ``gang_replica_losses_total`` for the
     non-migrating baseline's deaths.
     """
 
@@ -142,7 +144,10 @@ class GangPool:
         self.controller = platform.controller
         self.metrics = platform.metrics
         self.executor = platform.executor
-        self.rng = platform.rng
+        # gangs draw (drain jitter) at event time; give each its own stream
+        # keyed by formation order so tie reshuffles can't reassign draws
+        self._gang_seed = int(platform.rng.integers(2 ** 31))
+        self._n_formed = 0
         self.gang_size = gang_size
         self.migrate = migrate
         self.form_warmup = form_warmup      # tensor-parallel model-load cost
@@ -188,9 +193,11 @@ class GangPool:
         if self.gang_concurrency is not None:
             kw["concurrency"] = self.gang_concurrency
         gang = ElasticGangInvoker(
-            self.sim, self.controller, members=members, rng=self.rng,
+            self.sim, self.controller, members=members,
+            rng=np.random.default_rng((self._gang_seed, self._n_formed)),
             executor=self.executor, grace=members[0].grace,
             warmup=self.form_warmup, **kw)
+        self._n_formed += 1
         self.gangs.append(gang)
         if self.metrics is not None:
             self.metrics.gauge(
@@ -224,7 +231,7 @@ class GangPool:
             # model load (form_warmup)
             self.n_replica_losses += 1
             if self.metrics is not None:
-                self.metrics.counter("gang_replica_losses").inc()
+                self.metrics.counter("gang_replica_losses_total").inc()
             survivors = gang.release_members()
             gang.sigterm("replica-lost")
             for m in survivors:
@@ -245,9 +252,9 @@ class GangPool:
         self.n_migrations += 1
         self.migrated_bytes += moved
         if self.metrics is not None:
-            self.metrics.counter("gang_migrations", kind=kind).inc()
-            self.metrics.counter("gang_migrated_bytes", kind=kind).inc(moved)
-            self.metrics.counter("gang_wire_bytes", kind=kind).inc(wire)
+            self.metrics.counter("gang_migrations_total", kind=kind).inc()
+            self.metrics.counter("gang_migrated_bytes_total", kind=kind).inc(moved)
+            self.metrics.counter("gang_wire_bytes_total", kind=kind).inc(wire)
 
 
 class ElasticServingExecutor:

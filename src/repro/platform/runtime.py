@@ -99,7 +99,7 @@ class Platform:
                  slos: Optional[Dict[str, SLOClass]] = None):
         sc = scenario
         self.scenario = sc
-        self.sim = Simulator()
+        self.sim = Simulator(tie_break=sc.tie_break, tie_seed=sc.tie_seed)
         self.rng = np.random.default_rng(sc.seed + 77)
         if windows is None:
             tc = trace_cfg or sc.trace.trace_config(sc.duration, sc.seed)
@@ -198,11 +198,17 @@ class Platform:
 
     # --- request entry points ------------------------------------------------
     def submit(self, fn: str, exec_time: Optional[float] = None,
-               timeout: Optional[float] = None):
+               timeout: Optional[float] = None,
+               interruptible: Optional[bool] = None):
         """Submit one request now; ``None`` falls back to the scenario's
-        workload defaults (0.0 is a legitimate explicit value)."""
+        workload defaults (0.0 is a legitimate explicit value). Workload
+        sources pre-draw ``interruptible`` at schedule time so the shared
+        RNG stream is never consumed at event time (tie-order reshuffles
+        must not reassign draws); ``None`` draws here for manual callers.
+        """
         w = self.scenario.workload
-        interruptible = (self.rng.random() >= w.non_interruptible_share)
+        if interruptible is None:
+            interruptible = bool(self.rng.random() >= w.non_interruptible_share)
         req = Request(fn=fn,
                       exec_time=(exec_time if exec_time is not None
                                  else w.exec_time),
@@ -213,11 +219,16 @@ class Platform:
         self._max_timeout = max(self._max_timeout, req.timeout)
         self.controller.submit(req)
 
-    def submit_class(self, cls: FunctionClass, fn: str):
-        req = Request(fn=fn, exec_time=cls.sample_exec(self.rng),
+    def submit_class(self, cls: FunctionClass, fn: str,
+                     exec_time: Optional[float] = None,
+                     interruptible: Optional[bool] = None):
+        if exec_time is None:
+            exec_time = cls.sample_exec(self.rng)
+        if interruptible is None:
+            interruptible = bool(self.rng.random() < cls.interruptible_share)
+        req = Request(fn=fn, exec_time=exec_time,
                       arrival=self.sim.now, timeout=cls.timeout,
-                      interruptible=(self.rng.random()
-                                     < cls.interruptible_share),
+                      interruptible=interruptible,
                       tenant=cls.tenant, slo_class=cls.slo_class)
         self.requests.append(req)
         self._max_timeout = max(self._max_timeout, req.timeout)

@@ -147,6 +147,12 @@ class ScenarioConfig:
     name: str = "scenario"
     duration: float = DAY
     seed: int = 0
+    # same-timestamp event ordering (repro.core.events.Simulator): "fifo"
+    # reproduces the published insertion-order runs; "shuffle" permutes
+    # equal-time ties with tie_seed — the tie-order fuzz harness sweeps this
+    # to certify aggregates don't lean on insertion accidents
+    tie_break: str = "fifo"
+    tie_seed: int = 0
     trace: TraceSection = dataclasses.field(default_factory=TraceSection)
     workload: WorkloadSection = dataclasses.field(
         default_factory=WorkloadSection)

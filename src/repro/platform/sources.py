@@ -2,11 +2,13 @@
 :class:`repro.platform.interfaces.WorkloadSource` seam, plus the named-suite
 registry used by declarative scenarios.
 
-Arrival *times* are drawn at schedule time (so heavy generators run once, up
-front), but per-request attribute draws (interruptibility, per-call exec
-times) happen inside the submit callbacks at event time — interleaved with
-the cluster sim's draws on the shared RNG exactly as the pre-seam runtime
-did, keeping seeded runs bit-for-bit reproducible.
+Arrival *times* AND per-request attribute draws (interruptibility, per-call
+exec times) all happen here at schedule time, before the simulation runs a
+single event. Nothing on the event path consumes the shared RNG stream, so a
+request's randomness is a function of its position in the arrival sequence —
+not of the order same-time events happen to pop. That is what lets the
+tie-order fuzz harness (``tie_break="shuffle"``) reshuffle equal-time events
+and still reproduce every aggregate bit-for-bit.
 """
 from __future__ import annotations
 
@@ -47,11 +49,15 @@ class UniformLoad:
             times = np.cumsum(gaps)
         else:
             times = (np.arange(n) + 1) / self.qps
+        ns = platform.scenario.workload.non_interruptible_share
         for i, t in enumerate(times):
             if t >= duration:
                 break
             fn = f"fn-{i % self.n_functions:03d}"
-            platform.sim.at(float(t), platform.submit, fn)
+            interruptible = bool(platform.rng.random() >= ns)
+            # reprolint: disable=RPL601 -- every request attribute is pre-drawn above, so a submit tied with worker events carries identical state either side of the tie; routing differences permute queue order only — fuzz-invariant (test_tie_order.py)
+            platform.sim.at(float(t), platform.submit, fn, None, None,
+                            interruptible)
 
 
 class SuiteLoad:
@@ -63,8 +69,17 @@ class SuiteLoad:
 
     def schedule(self, platform: "Platform") -> None:
         duration = platform.scenario.duration
-        for t, cls, fn in self.suite.events(platform.rng, duration):
-            platform.sim.at(t, platform.submit_class, cls, fn)
+        # materialize the arrival stream BEFORE drawing per-request
+        # attributes: events() draws arrival times lazily from the same rng,
+        # and interleaving would change the arrival process itself
+        events = list(self.suite.events(platform.rng, duration))
+        for t, cls, fn in events:
+            exec_time = float(cls.sample_exec(platform.rng))
+            interruptible = bool(platform.rng.random()
+                                 < cls.interruptible_share)
+            # reprolint: disable=RPL601 -- same pre-drawn-attribute argument as UniformLoad above; suite arrivals are Poisson/on-off with continuous times, so submit-vs-submit ties have measure zero — fuzz-invariant
+            platform.sim.at(t, platform.submit_class, cls, fn, exec_time,
+                            interruptible)
 
 
 @register("workload", "uniform")

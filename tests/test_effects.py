@@ -1,0 +1,220 @@
+"""Unit suite for the interprocedural effects engine
+(tools/analyze/effects.py): function indexing, call resolution, transitive
+effect closure, and Simulator callback-site collection — all on in-memory
+fixture FileUnits, so the tests describe the engine's contract without
+depending on the real tree (the repo-level pins live in test_reprolint.py).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TOOLS = os.path.join(REPO, "tools")
+if TOOLS not in sys.path:
+    sys.path.insert(0, TOOLS)
+
+from analyze.core import FileUnit, RepoContext
+from analyze.effects import Effect, build_engine, module_of
+
+
+def _engine(sources):
+    units = [FileUnit(p, textwrap.dedent(src))
+             for p, src in sorted(sources.items())]
+    return build_engine(RepoContext(units))
+
+
+_SIM = """
+    class Simulator:
+        def __init__(self):
+            self.now = 0.0
+
+        def at(self, t, fn, *args):
+            pass
+
+        def after(self, d, fn, *args):
+            pass
+
+        def at_front(self, t, fn, *args):
+            pass
+    """
+
+
+def test_module_of():
+    assert module_of("src/repro/core/cluster.py") == "repro.core.cluster"
+    assert module_of("src/repro/faas/metrics.py") == "repro.faas.metrics"
+
+
+def test_function_and_method_indexing():
+    eng = _engine({"src/repro/core/x.py": """
+        def helper():
+            pass
+
+        class Box:
+            def __init__(self):
+                self.items = []
+
+            def put(self, v):
+                self.items.append(v)
+        """})
+    assert "repro.core.x.helper" in eng.functions
+    assert "repro.core.x.Box.put" in eng.functions
+    info = eng.functions["repro.core.x.Box.put"]
+    assert info.cls == "Box"
+    assert info.path == "src/repro/core/x.py"
+
+
+def test_direct_reads_and_writes():
+    eng = _engine({"src/repro/core/x.py": """
+        class Box:
+            def __init__(self):
+                self.items = []
+                self.n = 0
+
+            def put(self, v):
+                self.items.append(v)     # mutator call -> write
+                self.n += 1              # augassign -> read + write
+
+            def peek(self):
+                return self.items[0]     # load -> read
+        """})
+    r, w = eng.effects("repro.core.x.Box.put")
+    assert Effect("Box", "items") in w
+    assert Effect("Box", "n") in w and Effect("Box", "n") in r
+    r, w = eng.effects("repro.core.x.Box.peek")
+    assert Effect("Box", "items") in r
+    assert not w
+
+
+def test_transitive_closure_through_call_chain():
+    eng = _engine({"src/repro/core/x.py": """
+        class Box:
+            def __init__(self):
+                self.items = []
+
+            def _push(self, v):
+                self.items.append(v)
+
+            def _relay(self, v):
+                self._push(v)
+
+            def put(self, v):
+                self._relay(v)
+        """})
+    _, w = eng.effects("repro.core.x.Box.put")
+    assert Effect("Box", "items") in w
+
+
+def test_cross_class_resolution_via_annotated_attr():
+    eng = _engine({"src/repro/core/x.py": """
+        class Store:
+            def __init__(self):
+                self.rows = []
+
+            def add(self, v):
+                self.rows.append(v)
+
+        class Writer:
+            def __init__(self, store: Store):
+                self.store = store
+
+            def write(self, v):
+                self.store.add(v)
+        """})
+    info = eng.functions["repro.core.x.Writer.write"]
+    assert "repro.core.x.Store.add" in info.calls
+    _, w = eng.effects("repro.core.x.Writer.write")
+    assert Effect("Store", "rows") in w
+
+
+def test_unresolved_calls_are_counted_not_dropped():
+    eng = _engine({"src/repro/core/x.py": """
+        def f(cb):
+            cb.run()                 # unresolvable receiver: counted
+            return sorted([1, 2])    # builtin: untracked, not "unresolved"
+        """})
+    info = eng.functions["repro.core.x.f"]
+    assert info.unresolved_calls == 1
+    assert info.calls == set()
+
+
+def test_callback_site_collection_and_handler_resolution():
+    eng = _engine({"src/repro/core/x.py": textwrap.dedent(_SIM) + textwrap.dedent("""
+        class Driver:
+            def __init__(self, sim: Simulator):
+                self.sim = sim
+
+            def _tick(self):
+                pass
+
+            def start(self):
+                self.sim.at(1.0, self._tick)
+                self.sim.after(2.0, self._tick)
+                self.sim.at_front(0.0, self._tick)
+                self.sim.at(3.0, lambda: None)       # opaque, still counted
+        """)})
+    sites = eng.callback_sites
+    assert len(sites) == 4
+    assert sorted(s.api for s in sites) == ["after", "at", "at", "at_front"]
+    resolved = [s for s in sites if s.handler is not None]
+    assert {s.handler for s in resolved} == {"repro.core.x.Driver._tick"}
+    opaque = [s for s in sites if s.handler is None]
+    assert len(opaque) == 1 and "lambda" in opaque[0].handler_text
+
+
+def test_callback_site_now_in_args_detection():
+    eng = _engine({"src/repro/core/x.py": textwrap.dedent(_SIM) + textwrap.dedent("""
+        class Driver:
+            def __init__(self, sim: Simulator):
+                self.sim = sim
+
+            def _h(self, t0):
+                pass
+
+            def start(self):
+                self.sim.at(1.0, self._h, self.sim.now)
+                self.sim.at(2.0, self._h, 0.0)
+        """)})
+    flags = sorted((s.line, s.now_in_args) for s in eng.callback_sites)
+    assert [f for _, f in flags] == [True, False]
+
+
+def test_simulator_internal_delegation_is_not_a_site():
+    eng = _engine({"src/repro/core/x.py": textwrap.dedent(_SIM) + textwrap.dedent("""
+        class Clock(Simulator):
+            pass
+        """)})
+    # Simulator.after delegating to self.at (were it written that way) must
+    # not count; with no outside registrations there are no sites at all.
+    assert eng.callback_sites == []
+
+
+def test_engine_memoised_on_context():
+    units = [FileUnit("src/repro/core/x.py", "def f():\n    pass\n")]
+    ctx = RepoContext(units)
+    assert build_engine(ctx) is build_engine(ctx)
+
+
+def test_to_dict_shape():
+    eng = _engine({"src/repro/core/x.py": textwrap.dedent(_SIM) + textwrap.dedent("""
+        class Driver:
+            def __init__(self, sim: Simulator):
+                self.sim = sim
+                self.n = 0
+
+            def _tick(self):
+                self.n += 1
+
+            def start(self):
+                self.sim.at(1.0, self._tick)
+        """)})
+    d = eng.to_dict()
+    assert d["version"] == 1
+    assert d["n_functions"] == len(d["functions"])
+    tick = d["functions"]["repro.core.x.Driver._tick"]
+    assert "Driver.n" in tick["writes"]
+    assert len(d["callback_sites"]) == 1
+    site = d["callback_sites"][0]
+    assert site["api"] == "at"
+    assert site["handler"] == "repro.core.x.Driver._tick"

@@ -40,13 +40,13 @@ def _storm(migrate: bool, duration: float = 1800.0, seed: int = 7):
 def test_gang_pool_migrates_and_survives_churn():
     p, res = _storm(migrate=True)
     m = p.metrics
-    assert m.total("gang_migrations") > 0
-    shrinks = m.counters_matching("gang_migrations")
+    assert m.total("gang_migrations_total") > 0
+    shrinks = m.counters_matching("gang_migrations_total")
     kinds = {dict(k)["kind"] for k in shrinks}
     assert "shrink" in kinds                # members left mid-gang
-    assert m.total("gang_migrated_bytes") > 0
-    assert m.total("gang_wire_bytes") > 0
-    assert m.total("gang_replica_losses") == 0
+    assert m.total("gang_migrated_bytes_total") > 0
+    assert m.total("gang_wire_bytes_total") > 0
+    assert m.total("gang_replica_losses_total") == 0
     # per-gang mesh gauges registered and scrapeable
     assert len(m.gauges_matching("gang_mesh_size")) >= 1
     assert res.outcome_counts.get("success", 0) > 0
@@ -55,8 +55,8 @@ def test_gang_pool_migrates_and_survives_churn():
 def test_gang_pool_lose_whole_replica_baseline():
     p, res = _storm(migrate=False)
     m = p.metrics
-    assert m.total("gang_replica_losses") > 0
-    assert m.total("gang_migrations") == 0
+    assert m.total("gang_replica_losses_total") > 0
+    assert m.total("gang_migrations_total") == 0
     assert res.outcome_counts.get("success", 0) > 0
 
 

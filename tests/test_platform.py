@@ -218,24 +218,31 @@ def test_admission_released_when_router_refuses_placement():
 
 # --- regression: hash router pins the pre-refactor behaviour -------------------
 def test_hash_run_reproduces_pre_refactor_numbers_bit_for_bit():
-    """Golden values captured from the pre-seam ``HarvestRuntime`` (commit
-    f98a1af) on the quickstart scenario: seed 0, 1 h, 5 QPS, fib, hash
-    routing. Exact float equality on every reported share."""
+    """Golden values for the quickstart scenario: seed 0, 1 h, 5 QPS, fib,
+    hash routing. Exact float equality on every reported share.
+
+    Originally captured from the pre-seam ``HarvestRuntime`` (commit
+    f98a1af). Re-pinned once for the tie-order RNG decoupling: every
+    event-time draw moved to a stable identity key (schedule-time request
+    attributes, per-invoker spawn streams, jittered proactive drains), which
+    re-seeds the day's randomness while leaving the mechanisms untouched.
+    The tie-order fuzz (test_tie_order.py) proves these numbers no longer
+    depend on event insertion order at equal timestamps."""
     sc = ScenarioConfig(duration=3600.0, seed=0,
                         workload=WorkloadSection(qps=5.0),
                         scheduling=SchedulingSection(model="fib"))
     res = Platform.build(sc).run()
     assert res.n_submitted == 17999
-    assert res.outcome_counts == {"success": 8737, "503": 9262}
-    assert res.slurm_coverage == 0.7183792469994525
+    assert res.outcome_counts == {"success": 8672, "503": 9327}
+    assert res.slurm_coverage == 0.7176793559830099
     assert res.sim_upper_bound == 0.5765852603243591
     assert res.response_p50 == 0.5900000000001455
     assert res.response_p95 == 0.5900000000001455
-    assert res.invoked_share == 0.4854158564364687
+    assert res.invoked_share == 0.48180454469692763
     assert res.success_share == 1.0
     assert res.n_jobs_started == 12
     assert res.n_evicted == 8
-    assert float(np.mean(res.worker_samples["healthy"])) == 0.7285318559556787
+    assert float(np.mean(res.worker_samples["healthy"])) == 0.7340720221606648
 
 
 def test_hash_multi_tenant_run_reproduces_pre_refactor_numbers():
@@ -246,14 +253,20 @@ def test_hash_multi_tenant_run_reproduces_pre_refactor_numbers():
     p95 was re-pinned once, for the PR-4 warm-container LRU fix (last-use now
     stamped at completion, in-flight functions exempt from eviction): the
     recency change shifts a handful of warm/cold decisions, moving p95 from
-    0.8669291062664568 while every other number stays bit-identical."""
+    0.8669291062664568 while every other number stays bit-identical.
+
+    Re-pinned again for the tie-order RNG decoupling (see the quickstart
+    golden above): suite attribute draws moved to schedule time and SlurmSim
+    seeds its identity-keyed draw streams at construction, which shifts the
+    shared stream (n_submitted moves from 61346) without touching the
+    arrival or admission mechanisms."""
     sc = ScenarioConfig.multi_tenant_burst(duration=3600.0, scaler="static")
     res = Platform.build(sc).run()
-    assert res.n_submitted == 61346
-    assert res.outcome_counts == {"success": 34282, "503": 27064}
-    assert res.slurm_coverage == 0.8197089027181802
+    assert res.n_submitted == 61340
+    assert res.outcome_counts == {"success": 34249, "503": 27091}
+    assert res.slurm_coverage == 0.82375880636139
     assert res.n_throttled == 26747
-    assert res.response_p95 == 0.8664648930052858
+    assert res.response_p95 == 0.870131095641609
 
 
 def test_facade_matches_platform_build():
@@ -265,7 +278,7 @@ def test_facade_matches_platform_build():
     assert rt.controller is rt.platform.controller
     res = rt.run()
     assert res.n_submitted == 17999
-    assert res.slurm_coverage == 0.7183792469994525
+    assert res.slurm_coverage == 0.7176793559830099
 
 
 # --- satellite fixes -----------------------------------------------------------

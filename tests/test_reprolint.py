@@ -48,7 +48,7 @@ def test_rule_codes_are_unique_and_stable():
             assert code not in seen, f"{code} claimed by {seen[code]} and {cls}"
             seen[code] = cls
     assert set(seen) == set(ALL_RULES)
-    assert len(ALL_RULES) == 15
+    assert len(ALL_RULES) == 22
 
 
 # --- RPL101/102/103 determinism -------------------------------------------------
@@ -495,6 +495,7 @@ def test_cli_clean_on_repo_and_json_report(tmp_path):
     with open(out) as f:
         report = json.load(f)
     assert report["version"] == 1 and report["n_files"] > 50
+    assert report["wall_s"] > 0
     assert all(f["baselined"] for f in report["findings"])
 
 
@@ -535,3 +536,343 @@ def test_lint_imports_shim_exit_and_output():
 def test_lint_imports_shim_reexports_layering_table():
     import lint_imports
     assert lint_imports.LAYERING["core"] == {"faas", "platform", "distributed"}
+
+
+# --- RPL601/602 sim races -------------------------------------------------------
+_SIM_FIXTURE = """
+    class Simulator:
+        def __init__(self):
+            self.now = 0.0
+
+        def at(self, t, fn, *args):
+            pass
+
+        def after(self, d, fn, *args):
+            pass
+
+        def at_front(self, t, fn, *args):
+            pass
+
+
+    class Controller:
+        def __init__(self):
+            self.queue = []
+    """
+
+
+def _race_rules(driver_src):
+    return _rules(textwrap.dedent(_SIM_FIXTURE) + textwrap.dedent(driver_src))
+
+
+def test_rpl601_conflicting_same_class_handlers_fire():
+    rules = _race_rules("""
+        class Driver:
+            def __init__(self, sim: Simulator, controller: Controller):
+                self.sim = sim
+                self.controller = controller
+
+            def _a(self):
+                self.controller.queue.append(1)
+
+            def _b(self):
+                self.controller.queue.pop()
+
+            def start(self):
+                self.sim.at(1.0, self._a)
+                self.sim.at(1.0, self._b)
+        """)
+    assert rules.count("RPL601") == 2    # one finding per handler
+
+
+def test_rpl601_read_only_handlers_are_clean():
+    rules = _race_rules("""
+        class Driver:
+            def __init__(self, sim: Simulator, controller: Controller):
+                self.sim = sim
+                self.controller = controller
+
+            def _a(self):
+                return len(self.controller.queue)
+
+            def _b(self):
+                return bool(self.controller.queue)
+
+            def start(self):
+                self.sim.at(1.0, self._a)
+                self.sim.at(1.0, self._b)
+        """)
+    assert "RPL601" not in rules
+
+
+def test_rpl601_front_and_normal_classes_do_not_race():
+    """at_front handlers are ordered before normal events by construction,
+    so a conflicting front/normal pair is not a tie-order race."""
+    rules = _race_rules("""
+        class Driver:
+            def __init__(self, sim: Simulator, controller: Controller):
+                self.sim = sim
+                self.controller = controller
+
+            def _a(self):
+                self.controller.queue.append(1)
+
+            def _b(self):
+                self.controller.queue.pop()
+
+            def start(self):
+                self.sim.at_front(1.0, self._a)
+                self.sim.at(1.0, self._b)
+        """)
+    assert "RPL601" not in rules
+
+
+def test_rpl601_conflict_is_transitive_through_helpers():
+    rules = _race_rules("""
+        class Driver:
+            def __init__(self, sim: Simulator, controller: Controller):
+                self.sim = sim
+                self.controller = controller
+
+            def _push(self):
+                self.controller.queue.append(1)
+
+            def _a(self):
+                self._push()
+
+            def _b(self):
+                self._push()
+
+            def start(self):
+                self.sim.at(1.0, self._a)
+                self.sim.at(1.0, self._b)
+        """)
+    assert rules.count("RPL601") == 2
+
+
+def test_rpl602_now_captured_and_reread_fires():
+    rules = _race_rules("""
+        class Driver:
+            def __init__(self, sim: Simulator):
+                self.sim = sim
+
+            def _h(self, t0):
+                return self.sim.now - t0
+
+            def kick(self):
+                self.sim.at(1.0, self._h, self.sim.now)
+        """)
+    assert "RPL602" in rules
+
+
+def test_rpl602_single_timebase_is_clean():
+    rules = _race_rules("""
+        class Driver:
+            def __init__(self, sim: Simulator):
+                self.sim = sim
+
+            def _h(self, t0):
+                return t0 + 1.0
+
+            def kick(self):
+                self.sim.at(1.0, self._h, self.sim.now)
+        """)
+    assert "RPL602" not in rules
+
+
+def test_sim_race_pass_pins_repo_callback_coverage():
+    """Every Simulator.at/after/at_front registration in src/repro is seen
+    by the race pass; moving this number means a callback site was added or
+    removed — re-audit its conflicts before re-pinning."""
+    from analyze.passes.sim_race import SimRacePass
+    units = collect_units(REPO)
+    p = SimRacePass()
+    run_passes(units, [p])
+    assert p.checked_sites == 23
+
+
+# --- RPL701-705 metrics contracts -----------------------------------------------
+def test_rpl701_conflicting_label_schemas_fire():
+    rules = _rules("""
+        def a(metrics):
+            metrics.counter("req_total", route="r").inc()
+
+        def b(metrics):
+            metrics.counter("req_total", tenant="t").inc()
+        """, path="src/repro/faas/x.py")
+    assert rules.count("RPL701") == 1    # flagged against the first mint
+
+
+def test_rpl701_consistent_schemas_are_clean():
+    rules = _rules("""
+        def a(metrics):
+            metrics.counter("req_total", route="r").inc()
+
+        def b(metrics):
+            metrics.counter("req_total", route="w").inc()
+        """, path="src/repro/faas/x.py")
+    assert "RPL701" not in rules
+
+
+def test_rpl702_unit_suffixes():
+    rules = _rules("""
+        def a(metrics):
+            metrics.counter("requests").inc()
+            metrics.histogram("latency").observe(1.0)
+        """, path="src/repro/faas/x.py")
+    assert rules.count("RPL702") == 2
+    rules = _rules("""
+        def a(metrics):
+            metrics.counter("requests_total").inc()
+            metrics.histogram("latency_seconds").observe(1.0)
+            metrics.gauge("queue_depth").set(0)
+        """, path="src/repro/faas/x.py")
+    assert "RPL702" not in rules
+
+
+def test_rpl703_consumer_without_producer_fires():
+    rules = _rules("""
+        def read(metrics):
+            return metrics.total("missing_total")
+        """, path="src/repro/faas/x.py")
+    assert "RPL703" in rules
+
+
+def test_rpl703_matched_consumer_is_clean():
+    rules = _rules("""
+        def a(metrics):
+            metrics.counter("hits_total").inc()
+
+        def read(metrics):
+            return metrics.total("hits_total")
+        """, path="src/repro/faas/x.py")
+    assert "RPL703" not in rules
+
+
+def test_rpl704_never_written_fires():
+    rules = _rules("""
+        def a(metrics):
+            c = metrics.counter("dead_total")
+            return c
+        """, path="src/repro/faas/x.py")
+    assert "RPL704" in rules
+
+
+def test_rpl704_write_paths_are_clean():
+    rules = _rules("""
+        class P:
+            def __init__(self, metrics):
+                self._c = metrics.counter("hits_total")
+                metrics.gauge("depth", fn=lambda: 0)
+
+            def hit(self):
+                self._c.inc()
+        """, path="src/repro/faas/x.py")
+    assert "RPL704" not in rules
+
+
+def test_rpl705_dynamic_names_fire():
+    rules = _rules("""
+        def a(metrics, name):
+            metrics.counter(name).inc()
+            return metrics.total(name + "_total")
+        """, path="src/repro/faas/x.py")
+    assert rules.count("RPL705") == 2
+
+
+def test_metrics_mint_through_wrapper_is_visible():
+    """Wrapper see-through: minting through a memoised-handle helper is
+    still a mint site of the forwarded literal (and the wrapper body itself
+    is not double-counted)."""
+    from analyze.core import RepoContext
+    from analyze.passes.metrics_contracts import collect_metrics
+    src = textwrap.dedent("""
+        class P:
+            def __init__(self, metrics):
+                self.metrics = metrics
+
+            def _c(self, name, **labels):
+                return self.metrics.counter(name, **labels)
+
+            def hit(self):
+                self._c("hits_total", node="n1").inc()
+        """)
+    units = [FileUnit("src/repro/faas/x.py", src)]
+    model = collect_metrics(RepoContext(units))
+    mints = [m for m in model.mints if m.name == "hits_total"]
+    assert len(mints) == 1
+    assert mints[0].via == "_c" and mints[0].written
+    assert mints[0].labels == ("node",)
+
+
+def test_metrics_loop_minted_names_expand():
+    from analyze.core import RepoContext
+    from analyze.passes.metrics_contracts import collect_metrics
+    src = textwrap.dedent("""
+        _KV = ("kv_a", "kv_b")
+
+        def a(metrics):
+            for k in _KV:
+                metrics.gauge(f"{k}_pages").set(0)
+        """)
+    units = [FileUnit("src/repro/faas/x.py", src)]
+    model = collect_metrics(RepoContext(units))
+    assert {m.name for m in model.mints} == {"kv_a_pages", "kv_b_pages"}
+
+
+# --- AST cache / changed-files mode ---------------------------------------------
+def test_collect_units_caches_parsed_trees(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text("x = 1\n")
+    u1 = collect_units(str(tmp_path), ("mod.py",))[0]
+    u2 = collect_units(str(tmp_path), ("mod.py",))[0]
+    assert u1 is u2                      # unchanged stat signature -> cached
+    f.write_text("x = 22\n")             # size change invalidates
+    u3 = collect_units(str(tmp_path), ("mod.py",))[0]
+    assert u3 is not u1
+    assert "22" in u3.source
+
+
+def test_changed_files_mode_scopes_per_file_and_skips_project_passes():
+    sources = {
+        "src/repro/core/a.py":
+            "import repro.platform.x\n\ndef f(x):\n    return hash(x)\n",
+        "src/repro/platform/x.py": "import repro.core.a\n",
+    }
+    units = [FileUnit(p, s) for p, s in sorted(sources.items())]
+    full, _ = run_passes(units, all_passes())
+    assert "RPL512" in {f.rule for f in full}        # cycle needs the tree
+    only, _ = run_passes(units, all_passes(),
+                         per_file_only=["src/repro/core/a.py"])
+    assert {f.path for f in only} == {"src/repro/core/a.py"}
+    # per-file rules still fire; RPL511/512 are project passes and skip
+    assert {f.rule for f in only} == {"RPL101"}
+
+
+def test_cli_check_catalog_and_time_budget(tmp_path):
+    proc = subprocess.run(
+        [sys.executable, "tools/analyze", "--check-catalog"],
+        capture_output=True, text=True, timeout=120, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    proc = subprocess.run(
+        [sys.executable, "tools/analyze", "--time-budget", "0"],
+        capture_output=True, text=True, timeout=120, cwd=REPO)
+    assert proc.returncode == 1
+    assert "over the" in proc.stderr
+
+
+def test_cli_emits_graph_and_catalog_artifacts(tmp_path):
+    eff = str(tmp_path / "effects.json")
+    cat = str(tmp_path / "catalog.json")
+    proc = subprocess.run(
+        [sys.executable, "tools/analyze",
+         "--emit-effects-graph", eff, "--emit-metrics-catalog", cat],
+        capture_output=True, text=True, timeout=180, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    with open(eff) as f:
+        graph = json.load(f)
+    assert graph["n_functions"] > 300
+    assert len(graph["callback_sites"]) == 23
+    with open(cat) as f:
+        catalog = json.load(f)
+    names = {m["name"] for m in catalog["metrics"]}
+    assert "invocations_total" in names or len(names) > 10

@@ -5,10 +5,18 @@
     python tools/analyze --select RPL5        # only config/layering rules
     python tools/analyze --json out.json      # machine-readable report
     python tools/analyze --write-baseline     # grandfather current findings
+    python tools/analyze --paths a.py b.py    # changed-files mode (per-file
+                                              # rules only; project passes
+                                              # need the whole repo)
+    python tools/analyze --emit-effects-graph g.json   # call graph + effects
+    python tools/analyze --emit-metrics-catalog c.json # every minted metric
+    python tools/analyze --check-catalog      # README catalog drift check
+    python tools/analyze --update-catalog     # rewrite the README section
 
 Exit status: 0 when every finding is suppressed or baselined, 1 otherwise
-(2 on usage errors). CI runs this in the fast tier and uploads the JSON
-report as an artifact.
+(2 on usage errors). CI runs this in the fast tier with a wall-clock budget
+(--time-budget) and uploads the JSON report, the effects graph, and the
+metrics catalog as artifacts.
 """
 from __future__ import annotations
 
@@ -16,25 +24,71 @@ import argparse
 import json
 import os
 import sys
+import time
 from typing import List, Optional
 
-from analyze.core import (DEFAULT_ROOTS, Finding, collect_units,
+from analyze.core import (DEFAULT_ROOTS, RepoContext, collect_units,
                           load_baseline, run_passes, write_baseline)
+from analyze.effects import build_engine
 from analyze.passes import all_passes, rule_catalog
+from analyze.passes.metrics_contracts import (build_catalog, catalog_markdown,
+                                              collect_metrics)
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))))
 DEFAULT_BASELINE = os.path.join(REPO_ROOT, "tools", "analyze",
                                 "baseline.json")
 
+CATALOG_BEGIN = "<!-- metrics-catalog:begin -->"
+CATALOG_END = "<!-- metrics-catalog:end -->"
+
+
+def _write_json(path: str, payload) -> None:
+    out_dir = os.path.dirname(path)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1)
+        fh.write("\n")
+
+
+def _readme_catalog(readme_path: str, md: str,
+                    update: bool) -> Optional[str]:
+    """Compare (or rewrite) the README metrics-catalog section. Returns an
+    error string on drift/missing markers, None when in sync."""
+    with open(readme_path) as fh:
+        text = fh.read()
+    try:
+        head, rest = text.split(CATALOG_BEGIN, 1)
+        current, tail = rest.split(CATALOG_END, 1)
+    except ValueError:
+        return (f"README is missing the {CATALOG_BEGIN} / {CATALOG_END} "
+                f"markers")
+    wanted = "\n" + md + "\n"
+    if current == wanted:
+        return None
+    if update:
+        with open(readme_path, "w") as fh:
+            fh.write(head + CATALOG_BEGIN + wanted + CATALOG_END + tail)
+        return None
+    return ("README metrics catalog is stale — run "
+            "`python tools/analyze --update-catalog`")
+
 
 def main(argv: Optional[List[str]] = None) -> int:
+    t0 = time.monotonic()
     ap = argparse.ArgumentParser(
         prog="reprolint",
         description="AST-based invariant checks for the repro codebase.")
     ap.add_argument("paths", nargs="*",
                     help=f"repo-relative files/dirs to analyze "
                          f"(default: {' '.join(DEFAULT_ROOTS)})")
+    ap.add_argument("--paths", dest="changed_paths", nargs="+", default=None,
+                    metavar="FILE",
+                    help="changed-files mode: run per-file rules only on "
+                         "these repo-relative files (whole-repo passes are "
+                         "skipped — they need the full tree); the rest of "
+                         "the repo is still parsed as resolution context")
     ap.add_argument("--json", dest="json_out", metavar="PATH",
                     help="write the full findings report as JSON")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE,
@@ -45,6 +99,23 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="comma-separated rule-code prefixes (e.g. "
                          "RPL2,RPL501)")
     ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--emit-effects-graph", metavar="PATH", default=None,
+                    help="dump the interprocedural effects engine's view "
+                         "(call graph, per-function transitive read/write "
+                         "sets, simulator callback sites) as JSON")
+    ap.add_argument("--emit-metrics-catalog", metavar="PATH", default=None,
+                    help="dump the metrics catalog (every minted metric: "
+                         "kind, labels, unit, producing modules) as JSON")
+    ap.add_argument("--check-catalog", action="store_true",
+                    help="fail (exit 1) when the README metrics-catalog "
+                         "section is out of sync with the code")
+    ap.add_argument("--update-catalog", action="store_true",
+                    help="rewrite the README metrics-catalog section from "
+                         "the code")
+    ap.add_argument("--time-budget", type=float, default=None,
+                    metavar="SECONDS",
+                    help="fail (exit 1) when the analyze run exceeds this "
+                         "wall-clock budget")
     args = ap.parse_args(argv)
 
     if args.list_rules:
@@ -57,11 +128,31 @@ def main(argv: Optional[List[str]] = None) -> int:
     except (OSError, SyntaxError) as e:
         print(f"reprolint: {e}", file=sys.stderr)
         return 2
-    findings, n_suppressed = run_passes(units, all_passes())
+    findings, n_suppressed = run_passes(
+        units, all_passes(), per_file_only=args.changed_paths or ())
     if args.select:
         prefixes = tuple(p.strip().upper() for p in args.select.split(",")
                          if p.strip())
         findings = [f for f in findings if f.rule.startswith(prefixes)]
+
+    ctx = RepoContext(units)
+    if args.emit_effects_graph:
+        _write_json(args.emit_effects_graph, build_engine(ctx).to_dict())
+    catalog = None
+    if (args.emit_metrics_catalog or args.check_catalog
+            or args.update_catalog):
+        catalog = build_catalog(collect_metrics(ctx))
+    if args.emit_metrics_catalog:
+        _write_json(args.emit_metrics_catalog,
+                    {"version": 1, "metrics": catalog})
+
+    catalog_err = None
+    if args.check_catalog or args.update_catalog:
+        catalog_err = _readme_catalog(os.path.join(REPO_ROOT, "README.md"),
+                                      catalog_markdown(catalog),
+                                      update=args.update_catalog)
+        if catalog_err is None and args.update_catalog:
+            print("reprolint: README metrics catalog is up to date")
 
     if args.write_baseline:
         write_baseline(args.baseline, findings)
@@ -72,6 +163,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     baseline = load_baseline(args.baseline)
     new = [f for f in findings if f.key() not in baseline]
     n_baselined = len(findings) - len(new)
+    wall_s = time.monotonic() - t0
 
     if args.json_out:
         report = {
@@ -79,22 +171,28 @@ def main(argv: Optional[List[str]] = None) -> int:
             "n_files": len(units),
             "n_suppressed": n_suppressed,
             "n_baselined": n_baselined,
+            "wall_s": round(wall_s, 4),
             "findings": [{**f.__dict__, "baselined": f.key() in baseline}
                          for f in findings],
         }
-        out_dir = os.path.dirname(args.json_out)
-        if out_dir:
-            os.makedirs(out_dir, exist_ok=True)
-        with open(args.json_out, "w") as fh:
-            json.dump(report, fh, indent=1)
-            fh.write("\n")
+        _write_json(args.json_out, report)
 
     for f in new:
         print(f.render())
     tail = (f"{len(units)} files, {len(rule_catalog())} rules, "
-            f"{n_baselined} baselined, {n_suppressed} suppressed")
+            f"{n_baselined} baselined, {n_suppressed} suppressed, "
+            f"{wall_s:.2f}s")
+    rc = 0
     if new:
         print(f"reprolint: {len(new)} finding(s) ({tail})", file=sys.stderr)
-        return 1
-    print(f"reprolint OK ({tail})")
-    return 0
+        rc = 1
+    if catalog_err:
+        print(f"reprolint: {catalog_err}", file=sys.stderr)
+        rc = 1
+    if args.time_budget is not None and wall_s > args.time_budget:
+        print(f"reprolint: run took {wall_s:.2f}s, over the "
+              f"{args.time_budget:.2f}s budget", file=sys.stderr)
+        rc = 1
+    if rc == 0:
+        print(f"reprolint OK ({tail})")
+    return rc

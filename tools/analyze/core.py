@@ -72,10 +72,30 @@ class RepoContext:
         self.by_path: Dict[str, FileUnit] = {u.path: u for u in self.units}
 
 
+# abs path -> ((mtime_ns, size), FileUnit). Parsing dominates analyze wall
+# time; within one process (tests run the repo self-check repeatedly, the
+# CLI analyzes overlapping path sets) a file whose stat signature is
+# unchanged reuses its parsed tree instead of re-reading and re-parsing.
+_AST_CACHE: Dict[str, Tuple[Tuple[int, int], FileUnit]] = {}
+
+
+def _load_unit(repo_root: str, rel: str) -> FileUnit:
+    abs_path = os.path.join(repo_root, rel)
+    st = os.stat(abs_path)
+    sig = (st.st_mtime_ns, st.st_size)
+    cached = _AST_CACHE.get(abs_path)
+    if cached is not None and cached[0] == sig:
+        return cached[1]
+    with open(abs_path) as f:
+        unit = FileUnit(rel, f.read())
+    _AST_CACHE[abs_path] = (sig, unit)
+    return unit
+
+
 def collect_units(repo_root: str,
                   roots: Sequence[str] = DEFAULT_ROOTS) -> List[FileUnit]:
-    """Parse every ``*.py`` under ``roots`` (repo-relative dirs or files)."""
-    units: List[Finding] = []
+    """Parse every ``*.py`` under ``roots`` (repo-relative dirs or files),
+    reusing cached parse trees for files whose (mtime, size) is unchanged."""
     paths: List[str] = []
     for root in roots:
         abs_root = os.path.join(repo_root, root)
@@ -89,11 +109,7 @@ def collect_units(repo_root: str,
                     rel = os.path.relpath(os.path.join(dirpath, fname),
                                           repo_root)
                     paths.append(rel)
-    out: List[FileUnit] = []
-    for rel in sorted(set(paths)):
-        with open(os.path.join(repo_root, rel)) as f:
-            out.append(FileUnit(rel, f.read()))
-    return out
+    return [_load_unit(repo_root, rel) for rel in sorted(set(paths))]
 
 
 # --- suppressions --------------------------------------------------------------
@@ -140,18 +156,30 @@ def write_baseline(path: str, findings: Sequence[Finding]) -> None:
 
 
 # --- runner --------------------------------------------------------------------
-def run_passes(units: Sequence[FileUnit],
-               passes: Sequence[Pass]) -> Tuple[List[Finding], int]:
-    """Returns (findings, n_suppressed); findings sorted by (path, line)."""
+def run_passes(units: Sequence[FileUnit], passes: Sequence[Pass], *,
+               per_file_only: Sequence[str] = (),
+               ) -> Tuple[List[Finding], int]:
+    """Returns (findings, n_suppressed); findings sorted by (path, line).
+
+    ``per_file_only`` enables changed-files mode: per-file rules run only on
+    the listed repo-relative paths and whole-repo (``run_project``) passes
+    are skipped entirely — they reason about the full call graph / metric
+    namespace and would report nonsense on a partial view. The full unit
+    set is still parsed (it is the context per-file rules resolve against).
+    """
     ctx = RepoContext(units)
     supp = {u.path: suppressed_lines(u) for u in units}
+    only = {p.replace(os.sep, "/") for p in per_file_only}
     findings: List[Finding] = []
     n_suppressed = 0
     for p in passes:
         raw: List[Finding] = []
         for unit in units:
+            if only and unit.path not in only:
+                continue
             raw.extend(p.run(unit, ctx))
-        raw.extend(p.run_project(ctx))
+        if not only:
+            raw.extend(p.run_project(ctx))
         for f in raw:
             if is_suppressed(f, supp.get(f.path, {})):
                 n_suppressed += 1

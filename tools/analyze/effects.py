@@ -1,0 +1,576 @@
+"""Interprocedural effects engine: whole-repo call graph + per-function
+effect sets over ``src/repro``.
+
+The per-file passes of PR 9 see one function at a time; the invariants the
+sim-race (RPL6xx) and metrics-contract (RPL7xx) passes check are properties
+of *pairs* of call chains — which ``self.``/module attributes a simulator
+callback transitively reads and writes, and which function ultimately mints
+a metric name. This module builds the shared substrate:
+
+* a **function index**: every module-level function and every method, keyed
+  ``repro.pkg.mod.fn`` / ``repro.pkg.mod.Class.meth``;
+* a lightweight **type environment** per class/function — ``self.x = Ctor()``
+  assignments, annotated parameters (string annotations included), and
+  locals bound to known constructors — enough to resolve ``self.controller
+  .submit`` to ``Controller.submit`` without running anything;
+* **direct effects** per function: attribute loads are reads, attribute
+  stores / augmented stores / known mutator calls (``.append``, ``.push``,
+  ``.pop``, ...) are writes, each qualified by the *owning class*
+  (``Controller.topics``) or module (``repro.core.cluster:_JOB_IDS``);
+* a **bounded-depth transitive closure** folding callee effects into
+  callers (monotone fixpoint; depth caps runaway recursion);
+* **callback registration sites**: every ``Simulator.at/after/at_front``
+  call outside the Simulator class itself, with its handler resolved to an
+  indexed function where possible.
+
+Precision notes (deliberate): effects are class-level, not instance-level —
+``Invoker.running`` names the attribute on *any* invoker, so two handlers
+touching different invokers still "conflict" (the sim-race pass treats that
+as a conservative over-approximation and the tie-order fuzz harness is the
+dynamic arbiter). Unresolvable calls (closures, dynamic dispatch, stdlib)
+are skipped, so effect sets are under-approximate across those edges; every
+skipped handler is still *counted* so coverage can be pinned.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from analyze.core import FileUnit, RepoContext, dotted
+
+_SRC = "src/repro/"
+
+# method names that mutate their receiver in place (containers and the
+# repo's own value types: Topic.push/pop, Counter.inc, Gauge.set, ...)
+MUTATORS = {
+    "append", "appendleft", "extend", "insert", "add", "discard", "remove",
+    "pop", "popleft", "popitem", "clear", "update", "setdefault", "push",
+    "inc", "set", "observe", "cancel", "sort", "reverse", "drain_into",
+}
+
+MAX_DEPTH = 16
+
+# The repo's constructor params are mostly unannotated, but receiver naming
+# is a strict convention (``self.sim``, ``self.controller``, ...). When no
+# annotation or ctor assignment pins a type, fall back to these — each only
+# applies when a class of that name is actually indexed, so fixture repos
+# without e.g. a Simulator class are unaffected.
+NAME_CONVENTIONS = {
+    "sim": "Simulator",
+    "controller": "Controller",
+    "slurm": "SlurmSim",
+    "inv": "Invoker",
+    "invoker": "Invoker",
+    "pool": "GangPool",
+    "gang_pool": "GangPool",
+    "metrics": "MetricsRegistry",
+}
+
+
+def module_of(path: str) -> str:
+    """'src/repro/core/cluster.py' -> 'repro.core.cluster'."""
+    return path[len("src/"):-len(".py")].replace("/", ".")
+
+
+@dataclasses.dataclass(frozen=True)
+class Effect:
+    """One attribute access: ``owner`` is a class name ('Controller') or a
+    module qualified as 'repro.core.cluster:' for module globals."""
+    owner: str
+    attr: str
+
+    def render(self) -> str:
+        return f"{self.owner}.{self.attr}"
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    qname: str                   # repro.core.cluster.SlurmSim._do_pass
+    path: str
+    line: int
+    cls: Optional[str]           # unqualified class name for methods
+    node: ast.AST = dataclasses.field(repr=False, default=None)
+    reads: Set[Effect] = dataclasses.field(default_factory=set)
+    writes: Set[Effect] = dataclasses.field(default_factory=set)
+    calls: Set[str] = dataclasses.field(default_factory=set)   # resolved qnames
+    unresolved_calls: int = 0
+
+
+@dataclasses.dataclass
+class CallbackSite:
+    """One ``sim.at/after/at_front(...)`` registration."""
+    path: str
+    line: int
+    api: str                     # at | after | at_front
+    handler: Optional[str]       # resolved qname, None when opaque
+    handler_text: str            # source text of the handler argument
+    in_function: Optional[str]   # qname of the registering function
+    now_in_args: bool            # a payload arg reads sim.now at schedule time
+
+
+def _ann_name(ann: Optional[ast.expr]) -> Optional[str]:
+    """Class name from an annotation: Name, Attribute tail, 'Quoted', or
+    Optional[X]/Sequence[X] unwrapped one level."""
+    if ann is None:
+        return None
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        tail = ann.value.split("[")[0].strip()
+        return tail.split(".")[-1].strip("'\" ") or None
+    if isinstance(ann, ast.Subscript):
+        base = _ann_name(ann.value)
+        if base in ("Optional",):
+            return _ann_name(ann.slice)
+        return None
+    if isinstance(ann, ast.Name):
+        return ann.id
+    if isinstance(ann, ast.Attribute):
+        return ann.attr
+    return None
+
+
+class _ModuleIndex:
+    """Per-module symbol tables: imported class names, local classes and
+    functions, and class -> {attr: class} type environments."""
+
+    def __init__(self, unit: FileUnit):
+        self.unit = unit
+        self.module = module_of(unit.path)
+        self.imports: Dict[str, str] = {}     # local name -> absolute dotted
+        self.classes: Dict[str, ast.ClassDef] = {}
+        self.functions: Dict[str, ast.FunctionDef] = {}
+        for node in ast.walk(unit.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.imports[a.asname or a.name.split(".")[0]] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.imports[a.asname or a.name] = \
+                        f"{node.module}.{a.name}"
+        for node in unit.tree.body:
+            if isinstance(node, ast.ClassDef):
+                self.classes[node.name] = node
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions[node.name] = node
+
+
+class EffectsEngine:
+    """Build with a :class:`RepoContext`; query resolved functions, callback
+    sites, and transitive effect sets."""
+
+    def __init__(self, ctx: RepoContext, roots: Sequence[str] = (_SRC,)):
+        self.functions: Dict[str, FunctionInfo] = {}
+        self.callback_sites: List[CallbackSite] = []
+        # class name -> defining module (last definition wins; repo class
+        # names are unique in practice and fixtures shadow deliberately)
+        self._class_module: Dict[str, str] = {}
+        # class name -> {attr or param: class name} type environment
+        self._type_env: Dict[str, Dict[str, str]] = {}
+        self._mod_index: Dict[str, _ModuleIndex] = {}
+        self._closure: Dict[str, Tuple[frozenset, frozenset]] = {}
+        units = [u for u in ctx.units
+                 if any(u.path.startswith(r) for r in roots)
+                 and u.path.endswith(".py")]
+        for u in units:
+            self._mod_index[module_of(u.path)] = _ModuleIndex(u)
+        for mi in self._mod_index.values():
+            self._index_module(mi)
+        for mi in self._mod_index.values():
+            self._analyze_module(mi)
+        self._compute_closures()
+
+    # --- indexing -------------------------------------------------------------
+    def _index_module(self, mi: _ModuleIndex):
+        for cname, cnode in mi.classes.items():
+            self._class_module[cname] = mi.module
+            env = self._type_env.setdefault(cname, {})
+            for stmt in cnode.body:
+                if isinstance(stmt, ast.FunctionDef):
+                    qn = f"{mi.module}.{cname}.{stmt.name}"
+                    self.functions[qn] = FunctionInfo(
+                        qn, mi.unit.path, stmt.lineno, cname, stmt)
+                    self._harvest_types(mi, stmt, env)
+                elif (isinstance(stmt, ast.AnnAssign)
+                      and isinstance(stmt.target, ast.Name)):
+                    t = self._resolve_class(mi, _ann_name(stmt.annotation))
+                    if t:
+                        env[stmt.target.id] = t
+        for fname, fnode in mi.functions.items():
+            qn = f"{mi.module}.{fname}"
+            self.functions[qn] = FunctionInfo(
+                qn, mi.unit.path, fnode.lineno, None, fnode)
+
+    def _resolve_class(self, mi: _ModuleIndex, name: Optional[str]) \
+            -> Optional[str]:
+        """Map a (possibly imported) name to a known class name."""
+        if name is None:
+            return None
+        name = name.split(".")[-1]
+        if name in mi.classes or name in self._class_module:
+            return name
+        tgt = mi.imports.get(name)
+        if tgt:
+            tail = tgt.split(".")[-1]
+            if tail in self._class_module:
+                return tail
+        return None
+
+    def _conv(self, name: str) -> Optional[str]:
+        """Conventional-name fallback type, only when the class is indexed."""
+        cls = NAME_CONVENTIONS.get(name)
+        return cls if cls in self._class_module else None
+
+    def _harvest_types(self, mi: _ModuleIndex, fn: ast.FunctionDef,
+                       env: Dict[str, str]):
+        """Record self.attr types from annotations, ctor calls, and
+        annotated ctor params assigned to self."""
+        param_types: Dict[str, str] = {}
+        args = fn.args
+        for a in (list(args.posonlyargs) + list(args.args)
+                  + list(args.kwonlyargs)):
+            t = self._resolve_class(mi, _ann_name(a.annotation))
+            if t:
+                param_types[a.arg] = t
+        for node in ast.walk(fn):
+            targets: Tuple[ast.expr, ...] = ()
+            value = None
+            if isinstance(node, ast.Assign):
+                targets, value = tuple(node.targets), node.value
+            elif isinstance(node, ast.AnnAssign) and node.target is not None:
+                targets, value = (node.target,), node.value
+                ann_t = self._resolve_class(mi, _ann_name(node.annotation))
+                for t in targets:
+                    if (ann_t and isinstance(t, ast.Attribute)
+                            and isinstance(t.value, ast.Name)
+                            and t.value.id == "self"):
+                        env.setdefault(t.attr, ann_t)
+            vt = self._value_type(mi, value, param_types)
+            if vt is None:
+                continue
+            for t in targets:
+                if (isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"):
+                    env.setdefault(t.attr, vt)
+
+    def _value_type(self, mi: _ModuleIndex, value: Optional[ast.expr],
+                    param_types: Dict[str, str]) -> Optional[str]:
+        if isinstance(value, ast.Name):
+            return param_types.get(value.id)
+        if isinstance(value, ast.Call):
+            name = dotted(value.func)
+            if name:
+                return self._resolve_class(mi, name)
+        return None
+
+    # --- per-function analysis ------------------------------------------------
+    def _analyze_module(self, mi: _ModuleIndex):
+        for info in list(self.functions.values()):
+            if module_of(info.path) != mi.module:
+                continue
+            self._analyze_function(mi, info)
+
+    def _owner_of(self, mi: _ModuleIndex, expr: ast.expr,
+                  local_types: Dict[str, str],
+                  own_class: Optional[str]) -> Optional[Tuple[str, str]]:
+        """Resolve an attribute access target ``expr.attr`` down to its
+        (owner, attr). ``expr`` here is the full Attribute node."""
+        if not isinstance(expr, ast.Attribute):
+            return None
+        base = expr.value
+        if isinstance(base, ast.Name):
+            if base.id == "self" and own_class:
+                return own_class, expr.attr
+            t = local_types.get(base.id) or self._conv(base.id)
+            if t:
+                return t, expr.attr
+            # module global mutated through the module object (rare)
+            tgt = mi.imports.get(base.id)
+            if tgt and tgt.startswith("repro."):
+                return f"{tgt}:", expr.attr
+            return None
+        if isinstance(base, ast.Attribute):
+            inner = self._owner_of(mi, base, local_types, own_class)
+            if inner:
+                owner, attr = inner
+                t = (self._type_env.get(owner, {}).get(attr)
+                     or self._conv(attr))
+                if t:
+                    return t, expr.attr
+        return None
+
+    def _local_types(self, mi: _ModuleIndex, fn: ast.AST,
+                     own_class: Optional[str]) -> Dict[str, str]:
+        """param annotations + locals assigned from known ctors/params."""
+        out: Dict[str, str] = {}
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            args = fn.args
+            for a in (list(args.posonlyargs) + list(args.args)
+                      + list(args.kwonlyargs)):
+                t = (self._resolve_class(mi, _ann_name(a.annotation))
+                     or self._conv(a.arg))
+                if t:
+                    out[a.arg] = t
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                vt = self._value_type(mi, node.value, out)
+                if vt is None and isinstance(node.value, ast.Attribute):
+                    owner_attr = self._owner_of(mi, node.value, out, own_class)
+                    if owner_attr:
+                        vt = self._type_env.get(owner_attr[0], {}).get(
+                            owner_attr[1])
+                if vt:
+                    out[node.targets[0].id] = vt
+        return out
+
+    def _analyze_function(self, mi: _ModuleIndex, info: FunctionInfo):
+        fn = info.node
+        own_class = info.cls
+        local_types = self._local_types(mi, fn, own_class)
+        module_globals = set(mi.functions) | set(mi.classes)
+
+        def note(eff: Optional[Tuple[str, str]], write: bool):
+            if eff is None:
+                return
+            owner, attr = eff
+            e = Effect(owner, attr)
+            (info.writes if write else info.reads).add(e)
+
+        for node in ast.walk(fn):
+            # attribute stores/loads
+            if isinstance(node, ast.Attribute):
+                eff = self._owner_of(mi, node, local_types, own_class)
+                if isinstance(node.ctx, (ast.Store, ast.Del)):
+                    note(eff, True)
+                else:
+                    note(eff, False)
+            elif isinstance(node, ast.Subscript):
+                # obj.attr[k] = v / del obj.attr[k] writes the container
+                if isinstance(node.ctx, (ast.Store, ast.Del)) \
+                        and isinstance(node.value, ast.Attribute):
+                    note(self._owner_of(mi, node.value, local_types,
+                                        own_class), True)
+            elif isinstance(node, ast.AugAssign):
+                if isinstance(node.target, ast.Attribute):
+                    eff = self._owner_of(mi, node.target, local_types,
+                                         own_class)
+                    note(eff, False)
+                    note(eff, True)
+            elif isinstance(node, ast.Call):
+                self._analyze_call(mi, info, node, local_types, own_class,
+                                   module_globals, note)
+
+    def _analyze_call(self, mi, info, node, local_types, own_class,
+                      module_globals, note):
+        func = node.func
+        name = dotted(func)
+        if isinstance(func, ast.Attribute):
+            # mutator on a resolvable attribute: obj.attr.append(x)
+            if func.attr in MUTATORS and isinstance(func.value,
+                                                    ast.Attribute):
+                note(self._owner_of(mi, func.value, local_types,
+                                    own_class), True)
+            # method call resolution
+            base = func.value
+            recv_cls = None
+            if isinstance(base, ast.Name):
+                if base.id == "self" and own_class:
+                    recv_cls = own_class
+                else:
+                    recv_cls = local_types.get(base.id) or self._conv(base.id)
+            elif isinstance(base, ast.Attribute):
+                owner_attr = self._owner_of(mi, base, local_types, own_class)
+                if owner_attr:
+                    recv_cls = (self._type_env.get(owner_attr[0], {}).get(
+                        owner_attr[1]) or self._conv(owner_attr[1]))
+            if recv_cls:
+                callee = self._method_qname(recv_cls, func.attr)
+                if callee:
+                    info.calls.add(callee)
+                    return
+            info.unresolved_calls += 1
+            return
+        if name is None:
+            info.unresolved_calls += 1
+            return
+        # plain name: local function, local class ctor, or imported
+        if name in module_globals:
+            if name in mi.classes:
+                ctor = self._method_qname(name, "__init__")
+                if ctor:
+                    info.calls.add(ctor)
+                return
+            info.calls.add(f"{mi.module}.{name}")
+            return
+        tgt = mi.imports.get(name)
+        if tgt and tgt.startswith("repro."):
+            tail = tgt.split(".")[-1]
+            if tail in self._class_module:
+                ctor = self._method_qname(tail, "__init__")
+                if ctor:
+                    info.calls.add(ctor)
+                return
+            if tgt in self.functions:
+                info.calls.add(tgt)
+                return
+        # builtins / stdlib / numpy: no tracked effects
+
+    def _method_qname(self, cls: str, meth: str) -> Optional[str]:
+        mod = self._class_module.get(cls)
+        if mod is None:
+            return None
+        qn = f"{mod}.{cls}.{meth}"
+        return qn if qn in self.functions else None
+
+    # --- transitive closure ---------------------------------------------------
+    def _compute_closures(self):
+        """Monotone fixpoint of reads/writes over the call graph, with a
+        depth bound as a safety valve (the repo graph converges in a few
+        iterations; the bound caps pathological fixture graphs)."""
+        for _ in range(MAX_DEPTH):
+            changed = False
+            for info in self.functions.values():
+                for callee in info.calls:
+                    c = self.functions.get(callee)
+                    if c is None:
+                        continue
+                    if not c.reads <= info.reads:
+                        info.reads |= c.reads
+                        changed = True
+                    if not c.writes <= info.writes:
+                        info.writes |= c.writes
+                        changed = True
+            if not changed:
+                break
+
+    def effects(self, qname: str) -> Tuple[Set[Effect], Set[Effect]]:
+        """(transitive reads, transitive writes) of one function."""
+        info = self.functions.get(qname)
+        if info is None:
+            return set(), set()
+        return set(info.reads), set(info.writes)
+
+    # --- callback sites -------------------------------------------------------
+    _SIM_APIS = ("at", "after", "at_front")
+
+    def collect_callback_sites(self) -> List[CallbackSite]:
+        """Every ``<sim>.at/after/at_front(time, fn, *args)`` registration in
+        the indexed modules, excluding the Simulator class's own internal
+        delegation. Resolution is best-effort; unresolved handlers keep a
+        site entry so coverage pins count them."""
+        self.callback_sites = []
+        for mi in self._mod_index.values():
+            self._collect_sites_in(mi)
+        self.callback_sites.sort(key=lambda s: (s.path, s.line))
+        return self.callback_sites
+
+    def _collect_sites_in(self, mi: _ModuleIndex):
+        for info in self.functions.values():
+            if module_of(info.path) != mi.module:
+                continue
+            if info.cls == "Simulator":
+                continue    # the engine's own at/after delegation
+            local_types = self._local_types(mi, info.node, info.cls)
+            for node in ast.walk(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                func = node.func
+                if not (isinstance(func, ast.Attribute)
+                        and func.attr in self._SIM_APIS):
+                    continue
+                if not self._is_sim_receiver(mi, func.value, local_types,
+                                             info.cls):
+                    continue
+                if len(node.args) < 2:
+                    continue
+                handler_node = node.args[1]
+                handler = self._resolve_handler(mi, handler_node,
+                                                local_types, info.cls)
+                now_in_args = any(
+                    self._reads_now(arg) for arg in node.args[2:])
+                self.callback_sites.append(CallbackSite(
+                    path=info.path, line=node.lineno, api=func.attr,
+                    handler=handler,
+                    handler_text=ast.unparse(handler_node),
+                    in_function=info.qname, now_in_args=now_in_args))
+
+    def _is_sim_receiver(self, mi, base, local_types, own_class) -> bool:
+        """True when the receiver is (typed as) the Simulator: an annotated
+        param/attr, or the naming convention ``sim`` / ``*.sim``."""
+        t = None
+        if isinstance(base, ast.Name):
+            t = local_types.get(base.id)
+            if t is None and base.id == "sim":
+                return True
+        elif isinstance(base, ast.Attribute):
+            owner_attr = self._owner_of(mi, base, local_types, own_class)
+            if owner_attr:
+                t = self._type_env.get(owner_attr[0], {}).get(owner_attr[1])
+            if t is None and base.attr == "sim":
+                return True
+        return t == "Simulator"
+
+    def _resolve_handler(self, mi, node, local_types, own_class) \
+            -> Optional[str]:
+        if isinstance(node, ast.Attribute):
+            base = node.value
+            if isinstance(base, ast.Name):
+                if base.id == "self" and own_class:
+                    return self._method_qname(own_class, node.attr)
+                t = local_types.get(base.id) or self._conv(base.id)
+                if t:
+                    return self._method_qname(t, node.attr)
+            elif isinstance(base, ast.Attribute):
+                owner_attr = self._owner_of(mi, base, local_types, own_class)
+                if owner_attr:
+                    t = (self._type_env.get(owner_attr[0], {}).get(
+                        owner_attr[1]) or self._conv(owner_attr[1]))
+                    if t:
+                        return self._method_qname(t, node.attr)
+            return None
+        if isinstance(node, ast.Name):
+            qn = f"{mi.module}.{node.id}"
+            return qn if qn in self.functions else None
+        return None
+
+    @staticmethod
+    def _reads_now(expr: ast.expr) -> bool:
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Attribute) and n.attr == "now":
+                return True
+        return False
+
+    # --- export ---------------------------------------------------------------
+    def to_dict(self) -> Dict:
+        """JSON-ready dump of the graph (CI artifact)."""
+        fns = {}
+        for qn, info in sorted(self.functions.items()):
+            fns[qn] = {
+                "path": info.path, "line": info.line,
+                "reads": sorted(e.render() for e in info.reads),
+                "writes": sorted(e.render() for e in info.writes),
+                "calls": sorted(info.calls),
+                "unresolved_calls": info.unresolved_calls,
+            }
+        sites = [dataclasses.asdict(s) for s in (self.callback_sites
+                                                 or self.collect_callback_sites())]
+        return {"version": 1, "n_functions": len(fns),
+                "functions": fns, "callback_sites": sites}
+
+
+def build_engine(ctx: RepoContext,
+                 roots: Sequence[str] = (_SRC,)) -> EffectsEngine:
+    """Engine construction memoised on the context object: multiple passes
+    in one run share one graph."""
+    cached = getattr(ctx, "_effects_engine", None)
+    if cached is not None and cached[0] == tuple(roots):
+        return cached[1]
+    eng = EffectsEngine(ctx, roots)
+    eng.collect_callback_sites()
+    ctx._effects_engine = (tuple(roots), eng)
+    return eng
+
+
+__all__ = ["Effect", "FunctionInfo", "CallbackSite", "EffectsEngine",
+           "build_engine", "module_of", "MUTATORS"]

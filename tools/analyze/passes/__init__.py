@@ -5,7 +5,9 @@ from analyze.passes.config_validation import ConfigValidationPass
 from analyze.passes.determinism import DeterminismPass
 from analyze.passes.fp_drift import FpDriftPass
 from analyze.passes.layering import LayeringPass
+from analyze.passes.metrics_contracts import MetricsContractsPass
 from analyze.passes.pallas_callsite import PallasCallsitePass
+from analyze.passes.sim_race import SimRacePass
 from analyze.passes.tracer_safety import TracerSafetyPass
 
 PASS_CLASSES = (
@@ -15,6 +17,8 @@ PASS_CLASSES = (
     PallasCallsitePass,
     ConfigValidationPass,
     LayeringPass,
+    SimRacePass,
+    MetricsContractsPass,
 )
 
 

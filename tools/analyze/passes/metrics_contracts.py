@@ -1,0 +1,514 @@
+"""Metrics-contracts pass (RPL7xx) and the metrics-catalog collector.
+
+Metric names are free-form strings minted at dozens of call sites
+(``registry.counter("x", **labels)``); nothing ties a producer's name to
+the consumers that aggregate it (``total``/``counters_matching``/
+``gauges_matching`` and the benchmark scrapers). This pass collects every
+mint and consume site — seeing *through* the repo's memoised handle
+wrappers (``Controller._metric``, ``RetryPolicy._c``) and
+constant-propagating ``f"kv_{key}"``-style names minted in loops over
+literal tuples — and checks the contracts:
+
+* RPL701 — one name minted with different label schemas (the registry
+  keys series by ``(name, sorted labels)``, so mismatched schemas silently
+  split one logical metric into disjoint series).
+* RPL702 — unit-suffix conventions: counters end ``_total``; histograms
+  end in a unit (``_s``/``_seconds``/``_bytes``/``_tokens``). Gauges are
+  point-in-time readings and stay lax.
+* RPL703 — a consumer (``total``/``*_matching`` in ``src`` or
+  ``benchmarks``) reads a name no producer ever mints: it sums an empty
+  family and reports 0 forever.
+* RPL704 — a metric is registered but never written (no chained
+  ``.inc/.observe/.set``, no ``fn=`` callback, and no write through any
+  variable/attribute the handle is assigned to).
+* RPL705 — a mint or consume site whose name is not statically
+  resolvable, which hides the site from every other contract check (and
+  from the generated catalog).
+
+``collect_metrics(ctx)`` is also the backend of
+``python tools/analyze --emit-metrics-catalog`` and the README catalog
+drift check.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from analyze.core import Finding, Pass, RepoContext, dotted
+
+KINDS = ("counter", "gauge", "histogram")
+CONSUMER_APIS = {"total": "counter", "counters_matching": "counter",
+                 "gauges_matching": "gauge"}
+WRITERS = {"inc", "observe", "set"}
+HIST_SUFFIXES = ("_s", "_seconds", "_bytes", "_tokens")
+
+# the registry implementation itself mints/reads nothing of its own
+_REGISTRY_FILE = "src/repro/faas/metrics.py"
+
+
+@dataclasses.dataclass
+class MintSite:
+    path: str
+    line: int
+    module: str
+    kind: str                    # counter | gauge | histogram
+    name: Optional[str]          # None when not statically resolvable
+    labels: Optional[Tuple[str, ...]]   # sorted label keys; None = dynamic
+    has_fn: bool                 # gauge callback (written by definition)
+    written: bool                # handle observed flowing into a write
+    via: Optional[str] = None    # wrapper method the mint went through
+
+
+@dataclasses.dataclass
+class ConsumeSite:
+    path: str
+    line: int
+    api: str                     # total | counters_matching | gauges_matching
+    name: Optional[str]
+
+
+@dataclasses.dataclass
+class MetricsModel:
+    mints: List[MintSite]
+    consumes: List[ConsumeSite]
+
+
+def _is_registry_recv(node: ast.expr) -> bool:
+    """Receiver heuristic: the registry travels as ``*.metrics`` or the
+    conventional short locals ``metrics`` / ``m``."""
+    d = dotted(node)
+    return d is not None and d.split(".")[-1] in ("metrics", "m")
+
+
+def _parents(tree: ast.AST) -> Dict[ast.AST, ast.AST]:
+    out: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            out[child] = node
+    return out
+
+
+class _WrapperSpec:
+    """A memoised-handle wrapper: a method whose body forwards a ``name``
+    parameter (and optionally a ``kind`` parameter via ``getattr``) into a
+    registry mint. Calls to it are mint sites of the forwarded literals."""
+
+    __slots__ = ("params", "name_param", "kind_param", "fixed_kind")
+
+    def __init__(self, params, name_param, kind_param, fixed_kind):
+        self.params = params            # positional param names, sans self
+        self.name_param = name_param
+        self.kind_param = kind_param    # None when kind is fixed
+        self.fixed_kind = fixed_kind    # None when kind comes from a param
+
+    def bind(self, call: ast.Call) -> Dict[str, ast.expr]:
+        bound: Dict[str, ast.expr] = {}
+        for i, arg in enumerate(call.args):
+            if i < len(self.params):
+                bound[self.params[i]] = arg
+        for kw in call.keywords:
+            if kw.arg:
+                bound[kw.arg] = kw.value
+        return bound
+
+
+def _find_wrappers(unit) -> Dict[str, _WrapperSpec]:
+    """{method name -> spec} for wrapper methods defined in this file."""
+    out: Dict[str, _WrapperSpec] = {}
+    for cnode in unit.tree.body:
+        if not isinstance(cnode, ast.ClassDef):
+            continue
+        for fn in cnode.body:
+            if not isinstance(fn, ast.FunctionDef):
+                continue
+            params = [a.arg for a in fn.args.args if a.arg != "self"]
+            for call in ast.walk(fn):
+                if not isinstance(call, ast.Call):
+                    continue
+                spec = _match_wrapper_body(call, params)
+                if spec is not None:
+                    out[fn.name] = spec
+                    break
+    return out
+
+
+def _match_wrapper_body(call: ast.Call, params: List[str]) \
+        -> Optional[_WrapperSpec]:
+    """Match ``<registry>.<kind>(name_param, ...)`` or
+    ``getattr(<registry>, kind_param)(name_param, ...)`` inside a method."""
+    if not (call.args and isinstance(call.args[0], ast.Name)
+            and call.args[0].id in params):
+        return None
+    name_param = call.args[0].id
+    f = call.func
+    if (isinstance(f, ast.Attribute) and f.attr in KINDS
+            and _is_registry_recv(f.value)):
+        return _WrapperSpec(params, name_param, None, f.attr)
+    if (isinstance(f, ast.Call) and isinstance(f.func, ast.Name)
+            and f.func.id == "getattr" and len(f.args) == 2
+            and _is_registry_recv(f.args[0])
+            and isinstance(f.args[1], ast.Name)
+            and f.args[1].id in params):
+        return _WrapperSpec(params, name_param, f.args[1].id, None)
+    return None
+
+
+def _module_str_consts(ctx: RepoContext) -> Dict[Tuple[str, str],
+                                                 Tuple[str, ...]]:
+    """(path, NAME) -> tuple of strings, for module-level literal tuples/
+    lists of constants (``_KV_GAUGES``), plus one import hop so a tuple
+    defined in executors.py resolves from elastic.py too."""
+    direct: Dict[Tuple[str, str], Tuple[str, ...]] = {}
+    by_modname: Dict[Tuple[str, str], Tuple[str, ...]] = {}
+    for u in ctx.units:
+        for node in u.tree.body:
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                continue
+            v = node.value
+            if isinstance(v, (ast.Tuple, ast.List)) and all(
+                    isinstance(e, ast.Constant) and isinstance(e.value, str)
+                    for e in v.elts):
+                vals = tuple(e.value for e in v.elts)
+                direct[(u.path, node.targets[0].id)] = vals
+                if u.path.startswith("src/"):
+                    mod = u.path[len("src/"):-len(".py")].replace("/", ".")
+                    by_modname[(mod, node.targets[0].id)] = vals
+    for u in ctx.units:
+        for node in ast.walk(u.tree):
+            if isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    hit = by_modname.get((node.module, a.name))
+                    if hit is not None:
+                        direct.setdefault(
+                            (u.path, a.asname or a.name), hit)
+    return direct
+
+
+def _expand_names(expr: ast.expr, parents: Dict[ast.AST, ast.AST],
+                  consts: Dict[Tuple[str, str], Tuple[str, ...]],
+                  path: str) -> Optional[List[str]]:
+    """Statically resolve a metric-name expression. Literal strings resolve
+    directly; an f-string whose only hole is the target of an enclosing
+    ``for`` over a literal (or module-constant) tuple of strings expands to
+    every iteration's value. Anything else is unresolvable (RPL705)."""
+    if isinstance(expr, ast.Constant) and isinstance(expr.value, str):
+        return [expr.value]
+    if not isinstance(expr, ast.JoinedStr):
+        return None
+    hole: Optional[str] = None
+    parts: List[Tuple[bool, str]] = []      # (is_hole, text)
+    for v in expr.values:
+        if isinstance(v, ast.Constant) and isinstance(v.value, str):
+            parts.append((False, v.value))
+        elif (isinstance(v, ast.FormattedValue) and v.format_spec is None
+              and isinstance(v.value, ast.Name)):
+            if hole is not None and v.value.id != hole:
+                return None
+            hole = v.value.id
+            parts.append((True, ""))
+        else:
+            return None
+    if hole is None:
+        return ["".join(t for _, t in parts)]
+    values = _loop_values(expr, hole, parents, consts, path)
+    if values is None:
+        return None
+    return ["".join(val if is_hole else t for is_hole, t in parts)
+            for val in values]
+
+
+def _loop_values(expr: ast.AST, var: str, parents, consts, path) \
+        -> Optional[Tuple[str, ...]]:
+    node = expr
+    while node in parents:
+        node = parents[node]
+        if isinstance(node, ast.For) and isinstance(node.target, ast.Name) \
+                and node.target.id == var:
+            it = node.iter
+            if isinstance(it, (ast.Tuple, ast.List)) and all(
+                    isinstance(e, ast.Constant)
+                    and isinstance(e.value, str) for e in it.elts):
+                return tuple(e.value for e in it.elts)
+            if isinstance(it, ast.Name):
+                return consts.get((path, it.id))
+            return None
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            # don't escape the defining scope looking for the loop
+            return None
+    return None
+
+
+def collect_metrics(ctx: RepoContext) -> MetricsModel:
+    """Every mint and consume site in the analyzed units (the registry
+    implementation file excluded)."""
+    cached = getattr(ctx, "_metrics_model", None)
+    if cached is not None:
+        return cached
+    consts = _module_str_consts(ctx)
+    mints: List[MintSite] = []
+    consumes: List[ConsumeSite] = []
+    for unit in ctx.units:
+        if unit.path == _REGISTRY_FILE or not unit.path.endswith(".py"):
+            continue
+        module = unit.path[len("src/"):-3].replace("/", ".") \
+            if unit.path.startswith("src/") else unit.path[:-3]
+        parents = _parents(unit.tree)
+        wrappers = _find_wrappers(unit)
+        wrapper_params: Set[str] = set()
+        for spec in wrappers.values():
+            wrapper_params.add(spec.name_param)
+        assigned: Dict[str, List[MintSite]] = {}   # handle target -> sites
+        written_targets: Set[str] = set()
+        for node in ast.walk(unit.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if not isinstance(f, ast.Attribute):
+                continue
+            # writes through stored handles: self._g.set(...), c.inc(...)
+            if f.attr in WRITERS:
+                d = dotted(f.value)
+                if d:
+                    written_targets.add(d)
+            if f.attr in CONSUMER_APIS and node.args:
+                names = _expand_names(node.args[0], parents, consts,
+                                      unit.path)
+                if names is None:
+                    consumes.append(ConsumeSite(unit.path, node.lineno,
+                                                f.attr, None))
+                else:
+                    for n in names:
+                        consumes.append(ConsumeSite(unit.path, node.lineno,
+                                                    f.attr, n))
+                continue
+            site_args = None      # (kind, name_expr, label_kwargs, via)
+            if f.attr in KINDS and _is_registry_recv(f.value):
+                # a wrapper's own forwarding body is not a mint site
+                if (node.args and isinstance(node.args[0], ast.Name)
+                        and node.args[0].id in wrapper_params):
+                    continue
+                if node.args:
+                    site_args = (f.attr, node.args[0], node.keywords, None)
+            elif (f.attr in wrappers and isinstance(f.value, ast.Name)
+                  and f.value.id == "self"):
+                spec = wrappers[f.attr]
+                bound = spec.bind(node)
+                kind = spec.fixed_kind
+                if spec.kind_param is not None:
+                    ke = bound.get(spec.kind_param)
+                    kind = ke.value if (isinstance(ke, ast.Constant)
+                                        and ke.value in KINDS) else None
+                ne = bound.get(spec.name_param)
+                if kind is not None and ne is not None:
+                    kws = [kw for kw in node.keywords
+                           if kw.arg not in (spec.kind_param,
+                                             spec.name_param)]
+                    site_args = (kind, ne, kws, f.attr)
+            if site_args is None:
+                continue
+            kind, name_expr, kwargs, via = site_args
+            names = _expand_names(name_expr, parents, consts, unit.path)
+            labels: Optional[Tuple[str, ...]] = tuple(sorted(
+                kw.arg for kw in kwargs if kw.arg and kw.arg != "fn"))
+            if any(kw.arg is None for kw in kwargs):
+                labels = None                        # **labels: dynamic
+            has_fn = kind == "gauge" and any(kw.arg == "fn"
+                                             for kw in kwargs)
+            written = has_fn or self_written(node, parents)
+            for n in (names if names is not None else [None]):
+                site = MintSite(unit.path, node.lineno, module, kind, n,
+                                labels, has_fn, written, via)
+                mints.append(site)
+                tgt = _assign_target(node, parents)
+                if tgt:
+                    assigned.setdefault(tgt, []).append(site)
+        # resolve handle-assignment writes within the module
+        for tgt, sites in assigned.items():
+            if tgt in written_targets:
+                for s in sites:
+                    s.written = True
+    model = MetricsModel(mints, consumes)
+    ctx._metrics_model = model
+    return model
+
+
+def self_written(call: ast.Call, parents: Dict[ast.AST, ast.AST]) -> bool:
+    """True when the mint is immediately chained into a write:
+    ``registry.counter("x", ...).inc()``."""
+    p = parents.get(call)
+    return (isinstance(p, ast.Attribute) and p.attr in WRITERS
+            and isinstance(parents.get(p), ast.Call))
+
+
+def _assign_target(call: ast.Call, parents) -> Optional[str]:
+    p = parents.get(call)
+    if isinstance(p, ast.Assign) and len(p.targets) == 1:
+        return dotted(p.targets[0])
+    return None
+
+
+# --- catalog --------------------------------------------------------------------
+def _unit_of(name: str, kind: str) -> str:
+    if name.endswith(("_seconds_total", "_s_total")):
+        return "seconds"
+    if name.endswith("_bytes_total") or name.endswith("_bytes"):
+        return "bytes"
+    if name.endswith("_tokens_total") or name.endswith("_tokens"):
+        return "tokens"
+    if name.endswith(("_s", "_seconds")):
+        return "seconds"
+    if name.endswith("_total"):
+        return "count"
+    if kind == "gauge":
+        return "level"
+    return "-"
+
+
+def build_catalog(model: MetricsModel) -> List[Dict]:
+    """One row per (name, kind): the source of the README catalog section
+    and the ``--emit-metrics-catalog`` JSON artifact."""
+    rows: Dict[Tuple[str, str], Dict] = {}
+    for s in model.mints:
+        if s.name is None:
+            continue
+        row = rows.setdefault((s.name, s.kind), {
+            "name": s.name, "kind": s.kind, "labels": set(),
+            "modules": set()})
+        if s.labels:
+            row["labels"].update(s.labels)
+        row["modules"].add(s.module)
+    out = []
+    for (name, kind), row in sorted(rows.items()):
+        out.append({
+            "name": name, "kind": kind,
+            "labels": sorted(row["labels"]),
+            "unit": _unit_of(name, kind),
+            "modules": sorted(row["modules"]),
+        })
+    return out
+
+
+def catalog_markdown(catalog: List[Dict]) -> str:
+    lines = ["| metric | kind | labels | unit | producer |",
+             "|---|---|---|---|---|"]
+    for row in catalog:
+        labels = ", ".join(row["labels"]) or "—"
+        mods = ", ".join(f"`{m}`" for m in row["modules"])
+        lines.append(f"| `{row['name']}` | {row['kind']} | {labels} "
+                     f"| {row['unit']} | {mods} |")
+    return "\n".join(lines) + "\n"
+
+
+# --- the pass -------------------------------------------------------------------
+class MetricsContractsPass(Pass):
+    name = "metrics_contracts"
+    rules = {
+        "RPL701": "metric name minted with conflicting label schemas",
+        "RPL702": "metric name violates the unit-suffix convention",
+        "RPL703": "consumer reads a metric name no producer registers",
+        "RPL704": "metric registered but never written",
+        "RPL705": "metric name is not statically resolvable",
+    }
+
+    def run_project(self, ctx) -> Iterable[Finding]:
+        model = collect_metrics(ctx)
+        findings: List[Finding] = []
+        findings.extend(self._check_schemas(model))
+        findings.extend(self._check_suffixes(model))
+        findings.extend(self._check_consumers(model))
+        findings.extend(self._check_written(model))
+        findings.extend(self._check_resolvable(model))
+        return findings
+
+    @staticmethod
+    def _first(sites: Sequence[MintSite]) -> MintSite:
+        return min(sites, key=lambda s: (s.path, s.line))
+
+    def _by_name(self, model) -> Dict[Tuple[str, str], List[MintSite]]:
+        out: Dict[Tuple[str, str], List[MintSite]] = {}
+        for s in model.mints:
+            if s.name is not None:
+                out.setdefault((s.name, s.kind), []).append(s)
+        return out
+
+    def _check_schemas(self, model) -> Iterable[Finding]:
+        for (name, kind), sites in sorted(self._by_name(model).items()):
+            fixed = [s for s in sites if s.labels is not None]
+            if not fixed:
+                continue
+            canon = self._first(fixed)
+            for s in sorted(fixed, key=lambda s: (s.path, s.line)):
+                if s.labels != canon.labels:
+                    yield Finding(
+                        "RPL701", s.path, s.line,
+                        f"{kind} '{name}' minted here with labels "
+                        f"{{{', '.join(s.labels) or ''}}} but with "
+                        f"{{{', '.join(canon.labels) or ''}}} at "
+                        f"{canon.path}:{canon.line}; the registry keys "
+                        f"series by (name, labels), so these are disjoint "
+                        f"series under one name")
+
+    def _check_suffixes(self, model) -> Iterable[Finding]:
+        for (name, kind), sites in sorted(self._by_name(model).items()):
+            site = self._first(sites)
+            if kind == "counter" and not name.endswith("_total"):
+                yield Finding(
+                    "RPL702", site.path, site.line,
+                    f"counter '{name}' must end in '_total' (with a unit "
+                    f"suffix before it when not a plain count, e.g. "
+                    f"'{name}_total')")
+            elif kind == "histogram" and not name.endswith(HIST_SUFFIXES):
+                yield Finding(
+                    "RPL702", site.path, site.line,
+                    f"histogram '{name}' must end in a unit suffix "
+                    f"({'/'.join(HIST_SUFFIXES)})")
+
+    def _check_consumers(self, model) -> Iterable[Finding]:
+        minted: Dict[str, Set[str]] = {"counter": set(), "gauge": set(),
+                                       "histogram": set()}
+        for s in model.mints:
+            if s.name is not None:
+                minted[s.kind].add(s.name)
+        for c in sorted(model.consumes, key=lambda c: (c.path, c.line)):
+            if c.name is None:
+                continue
+            family = CONSUMER_APIS[c.api]
+            if c.name not in minted[family]:
+                hint = ""
+                others = [k for k, names in minted.items()
+                          if c.name in names]
+                if others:
+                    hint = f" (it exists as a {others[0]})"
+                yield Finding(
+                    "RPL703", c.path, c.line,
+                    f"{c.api}('{c.name}') reads a {family} no producer "
+                    f"registers{hint}; it will aggregate an empty family "
+                    f"and report 0")
+
+    def _check_written(self, model) -> Iterable[Finding]:
+        for (name, kind), sites in sorted(self._by_name(model).items()):
+            if any(s.written for s in sites):
+                continue
+            site = self._first(sites)
+            yield Finding(
+                "RPL704", site.path, site.line,
+                f"{kind} '{name}' is registered but never written (no "
+                f".inc/.observe/.set on the handle, no fn= callback)")
+
+    def _check_resolvable(self, model) -> Iterable[Finding]:
+        for s in sorted(model.mints, key=lambda s: (s.path, s.line)):
+            if s.name is None:
+                yield Finding(
+                    "RPL705", s.path, s.line,
+                    f"{s.kind} minted with a non-constant name; use a "
+                    f"literal, or a loop over a module-level literal tuple "
+                    f"so the catalog and contracts can see it")
+        for c in sorted(model.consumes, key=lambda c: (c.path, c.line)):
+            if c.name is None:
+                yield Finding(
+                    "RPL705", c.path, c.line,
+                    f"{c.api}() called with a non-constant name; contracts "
+                    f"cannot match it to a producer")

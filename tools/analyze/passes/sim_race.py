@@ -1,0 +1,123 @@
+"""Sim-race pass (RPL6xx): same-timestamp event-handler races.
+
+Same-time events in the simulator are ordered only by insertion ``seq``
+(``src/repro/core/events.py``): the heap is a total order, so runs are
+reproducible, but *which* order two same-time handlers fire in is an
+accident of who scheduled first. If the pair's relative order is
+observable — both touch the same shared state, at least one writing — a
+refactor that reorders scheduling silently changes published numbers.
+
+Rules (both interprocedural, built on ``analyze.effects``):
+
+* RPL601 — a handler registered via ``Simulator.at/after/at_front`` whose
+  transitive effect set conflicts (write-write or read-write) with another
+  same-class handler's effects on shared ``Controller``/``SlurmSim``/
+  ``Invoker``/``GangPool`` state. ``at_front`` handlers form their own
+  class (negative seqs order them before every normal event, so a
+  front/normal pair is ordered by construction, not by accident). One
+  finding per handler — anchored at its first registration site, listing
+  the conflicting peers — so a genuinely benign handler costs one
+  suppression, not one per pair.
+* RPL602 — a registration whose *payload* arguments capture ``sim.now`` at
+  schedule time while the handler also reads ``sim.now`` when it fires: at
+  equal timestamps the two clock reads may disagree about "now" depending
+  on tie order.
+
+The static analysis is deliberately conservative (class-level effects, no
+instance separation); the tie-order shuffle fuzz
+(``tests/test_tie_order.py``) is the dynamic arbiter that separates real
+races from benign conflicts, and every suppression below should say why
+the order is immaterial or point at the fuzz coverage.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Set, Tuple
+
+from analyze.core import Finding, Pass
+from analyze.effects import CallbackSite, Effect, build_engine
+
+# State whose same-timestamp access order is an experiment-visible fact.
+SHARED_CLASSES = ("Controller", "SlurmSim", "Invoker", "GangPool")
+
+
+class SimRacePass(Pass):
+    name = "sim_race"
+    rules = {
+        "RPL601": "same-timestamp handlers conflict on shared sim state "
+                  "with order fixed only by insertion seq",
+        "RPL602": "handler captures sim.now in schedule-time payload args "
+                  "but re-reads sim.now at fire time",
+    }
+
+    def __init__(self):
+        self.checked_sites = 0       # pinned by tests, like PallasCallsitePass
+
+    def run_project(self, ctx) -> Iterable[Finding]:
+        engine = build_engine(ctx)
+        sites = engine.callback_sites
+        self.checked_sites = len(sites)
+        findings: List[Finding] = []
+        findings.extend(self._check_races(engine, sites))
+        findings.extend(self._check_now_capture(engine, sites))
+        return findings
+
+    # --- RPL601 ---------------------------------------------------------------
+    def _shared(self, effects: Set[Effect]) -> Set[Effect]:
+        return {e for e in effects if e.owner in SHARED_CLASSES}
+
+    def _check_races(self, engine, sites: List[CallbackSite]) \
+            -> Iterable[Finding]:
+        # handler qname -> (event class, first site, shared reads, writes)
+        handlers: Dict[str, Tuple[str, CallbackSite]] = {}
+        for s in sites:
+            if s.handler is None:
+                continue
+            cls = "front" if s.api == "at_front" else "normal"
+            key = (s.handler, cls)
+            if key not in handlers:
+                handlers[key] = s
+        effects = {}
+        for (qn, cls), site in handlers.items():
+            r, w = engine.effects(qn)
+            effects[(qn, cls)] = (self._shared(r), self._shared(w))
+        keys = sorted(handlers)
+        for key in keys:
+            qn, cls = key
+            r1, w1 = effects[key]
+            peers: List[Tuple[str, str]] = []   # (peer qname, sample attr)
+            for other in keys:
+                if other == key or other[1] != cls:
+                    continue
+                r2, w2 = effects[other]
+                conflict = (w1 & w2) | (w1 & r2) | (r1 & w2)
+                if conflict:
+                    sample = min(e.render() for e in conflict)
+                    peers.append((other[0], sample))
+            if not peers:
+                continue
+            site = handlers[key]
+            peer_txt = ", ".join(
+                f"{p.split('.')[-1]} (on {attr})" for p, attr in peers[:4])
+            more = "" if len(peers) <= 4 else f" and {len(peers) - 4} more"
+            yield Finding(
+                "RPL601", site.path, site.line,
+                f"handler {qn.split('repro.')[-1]} conflicts at equal "
+                f"timestamps with {peer_txt}{more}; relative order is fixed "
+                f"only by insertion seq — verify with the tie-order fuzz and "
+                f"suppress with a reason, or make the handlers commute")
+
+    # --- RPL602 ---------------------------------------------------------------
+    def _check_now_capture(self, engine, sites: List[CallbackSite]) \
+            -> Iterable[Finding]:
+        now = Effect("Simulator", "now")
+        for s in sites:
+            if not s.now_in_args or s.handler is None:
+                continue
+            reads, _ = engine.effects(s.handler)
+            if now in reads:
+                yield Finding(
+                    "RPL602", s.path, s.line,
+                    f"payload args capture sim.now at schedule time but "
+                    f"handler {s.handler.split('repro.')[-1]} re-reads "
+                    f"sim.now at fire time; at equal timestamps the two "
+                    f"reads can disagree — pass one clock explicitly")
